@@ -1,0 +1,86 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_report [--dir experiments/dryrun]
+Prints markdown tables; ``--csv`` prints raw CSV instead.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}"
+
+
+def fmt_t(t):
+    if t is None:
+        return "-"
+    if t >= 0.01:
+        return f"{t:.2f}"
+    return f"{t:.2e}"
+
+
+def load(dir_):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = load(args.dir)
+
+    if args.csv:
+        print("arch,shape,mesh,variant,status,temp_gb,flops_pd,hbm_gb_pd,"
+              "coll_gb_pd,t_compute,t_memory,t_memory_flash,t_collective,"
+              "bottleneck,useful_flop_ratio,mfu_bound")
+    else:
+        print("| arch | shape | mesh | variant | status | temp GB/dev | "
+              "t_comp s | t_mem s | t_mem(flash) s | t_coll s | bottleneck | "
+              "6ND/HLO | MFU bound |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+    for r in recs:
+        variant = []
+        if r.get("layout", "tp") != "tp":
+            variant.append(r["layout"])
+        if r.get("seq_shard"):
+            variant.append("sp")
+        if r.get("microbatch", 1) > 1:
+            variant.append(f"mb{r['microbatch']}")
+        if r.get("ce_chunk"):
+            variant.append(f"ce{r['ce_chunk']}")
+        vtag = "+".join(variant) or "baseline"
+        if r["status"] != "ok":
+            line = [r["arch"], r["shape"], r["mesh"], vtag,
+                    f"{r['status']}:{r.get('reason','')[:40]}"] + ["-"] * 8
+        else:
+            rf = r["roofline"]
+            ratio = rf.get("useful_flop_ratio")
+            mfu = rf.get("mfu_bound")
+            line = [
+                r["arch"], r["shape"], r["mesh"], vtag, "ok",
+                fmt_bytes(r["memory"]["temp_bytes"]),
+                fmt_t(rf["t_compute_s"]), fmt_t(rf["t_memory_s"]),
+                fmt_t(rf.get("t_memory_flash_s")), fmt_t(rf["t_collective_s"]),
+                rf["bottleneck"],
+                f"{ratio:.2f}" if ratio else "-",
+                f"{mfu:.3f}" if mfu else "-",
+            ]
+        if args.csv:
+            print(",".join(str(x) for x in line))
+        else:
+            print("| " + " | ".join(str(x) for x in line) + " |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end driver: federated LLM training through the production step.
+
+Trains a qwen-family decoder through `make_fl_train_step` — the SAME code
+path the multi-pod dry-run lowers for 256/512 chips — on the host devices,
+with GLR-CUCB channel scheduling, adaptive matching, zeta-weighted masked
+aggregation and AoI accounting all inside the compiled round.
+
+Default is a ~15M-param model / 60 rounds so it finishes in minutes on
+CPU; ``--size 100m --steps 300`` reproduces the deliverable-scale run on
+real hardware.
+
+Usage:
+  PYTHONPATH=src python examples/federated_llm_train.py
+  PYTHONPATH=src python examples/federated_llm_train.py --size 100m --steps 300
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.core.bandits import GLRCUCB
+from repro.core.channels import random_piecewise_env
+from repro.data.synthetic import synthetic_lm_batches
+from repro.launch.steps import make_fl_train_step, make_train_state_init
+from repro.models import build_model
+from repro.optim import adamw
+
+SIZES = {
+    "15m": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                d_ff=1024, vocab_size=8192),
+    "100m": dict(n_layers=12, d_model=640, n_heads=10, n_kv_heads=5,
+                 d_ff=2560, vocab_size=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="15m", choices=list(SIZES))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--channels", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None, help="checkpoint dir")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"fed-qwen-{args.size}", arch_type="dense",
+                      attention="gqa", qkv_bias=True, mlp_act="silu",
+                      **SIZES[args.size])
+    model = build_model(cfg, remat="none")
+    n_params = cfg.param_count()
+    print(f"model: {cfg.name} ({n_params/1e6:.1f}M params), "
+          f"{args.clients} FL clients over {args.channels} channels")
+
+    sched = GLRCUCB(args.channels, args.clients, history=256)
+    env = random_piecewise_env(jax.random.PRNGKey(1), args.channels,
+                               args.steps, max(args.steps // 40, 1))
+    opt = adamw(args.lr)
+    state = make_train_state_init(model, opt, sched, args.clients)(
+        jax.random.PRNGKey(0))
+    step = jax.jit(make_fl_train_step(model, opt, sched, env, args.clients))
+
+    data = synthetic_lm_batches(args.batch, args.seq, cfg.vocab_size)
+    t_start = time.time()
+    for t in range(args.steps):
+        batch = {"tokens": jnp.asarray(next(data))}
+        state, mets = step(state, batch, jax.random.fold_in(jax.random.PRNGKey(2), t))
+        if t % max(args.steps // 12, 1) == 0 or t == args.steps - 1:
+            toks_s = args.batch * args.seq * (t + 1) / (time.time() - t_start)
+            print(f"  step {t:4d}  loss={float(mets['loss']):7.4f}  "
+                  f"|S_t|={int(mets['n_success']):2d}/{args.clients}  "
+                  f"mean_aoi={float(mets['mean_aoi']):5.2f}  "
+                  f"aoi_var={float(mets['aoi_var']):6.2f}  "
+                  f"tok/s={toks_s:,.0f}")
+    if args.ckpt:
+        path = save_checkpoint(args.ckpt, args.steps,
+                               {"params": state.params, "fl": state.fl._asdict()})
+        print(f"checkpoint written: {path}")
+    print(f"done in {time.time()-t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

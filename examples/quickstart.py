@@ -1,0 +1,95 @@
+"""Quickstart: MAB channel scheduling for async FL in 60 seconds.
+
+Runs the paper's core loop at miniature scale:
+  1. a piecewise-stationary wireless environment (unknown, breaking means),
+  2. GLR-CUCB vs random scheduling — AoI regret comparison,
+  3. a federated training run with adaptive fairness-aware matching.
+
+Usage:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits import AoIAware, GLRCUCB, RandomScheduler
+from repro.core.channels import random_piecewise_env
+from repro.core.regret import simulate_aoi_regret, sublinearity_index
+from repro.data import FederatedLoader, make_federated_classification
+from repro.fl import AsyncFLConfig, AsyncFLTrainer
+
+KEY = jax.random.PRNGKey(0)
+N_CHANNELS, N_CLIENTS, T = 8, 4, 5000
+
+
+def ascii_curve(values, width=60, height=8, label=""):
+    v = jnp.asarray(values)
+    idx = jnp.linspace(0, len(v) - 1, width).astype(int)
+    samp = v[idx]
+    top = float(samp.max()) or 1.0
+    rows = []
+    for r in range(height, 0, -1):
+        line = "".join("#" if float(s) / top >= (r - 0.5) / height else " "
+                       for s in samp)
+        rows.append("  |" + line)
+    rows.append("  +" + "-" * width + f"  {label} (max={top:.0f})")
+    return "\n".join(rows)
+
+
+def main():
+    print("=== 1. Non-stationary channel environment ===")
+    env = random_piecewise_env(KEY, N_CHANNELS, T, n_breakpoints=4)
+    print(f"{N_CHANNELS} Bernoulli sub-channels, 4 hidden breakpoints, "
+          f"T={T} rounds, {N_CLIENTS} clients\n")
+
+    print("=== 2. AoI regret: scheduling policies (paper Fig. 2a) ===")
+    for sched in [
+        RandomScheduler(N_CHANNELS, N_CLIENTS),
+        GLRCUCB(N_CHANNELS, N_CLIENTS, history=512, detector_stride=4),
+        AoIAware(GLRCUCB(N_CHANNELS, N_CLIENTS, history=512, detector_stride=4)),
+    ]:
+        out = simulate_aoi_regret(sched, env, KEY, T)
+        print(f"  {sched.name:14s} regret={float(out['final_regret']):8.0f}  "
+              f"success={float(out['success_rate']):.3f}  "
+              f"sublinearity={float(sublinearity_index(out['regret'])):.3f}")
+        if sched.name == "glr-cucb":
+            curve = out["regret"]
+    print()
+    print(ascii_curve(curve, label="GLR-CUCB cumulative AoI regret"))
+
+    print("\n=== 3. Async FL with adaptive channel matching (Sec. V) ===")
+    cx, cy, tx, ty, px, py = make_federated_classification(
+        N_CLIENTS, samples_per_client=256, alpha=0.3)
+    loader = FederatedLoader(cx, cy, batch_size=32, local_epochs=2)
+    k1, k2 = jax.random.split(KEY)
+    params = {"w1": jax.random.normal(k1, (64, 128)) * 0.1, "b1": jnp.zeros(128),
+              "w2": jax.random.normal(k2, (128, 10)) * 0.1, "b2": jnp.zeros(10)}
+
+    def loss_fn(p, x, y):
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        lg = jax.nn.log_softmax(h @ p["w2"] + p["b2"])
+        return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
+
+    cfg = AsyncFLConfig(n_clients=N_CLIENTS, n_channels=N_CHANNELS,
+                        local_epochs=2, client_lr=0.08, server_lr=0.08)
+    env_fl = random_piecewise_env(jax.random.PRNGKey(3), N_CHANNELS, 200, 3)
+    trainer = AsyncFLTrainer(
+        cfg, GLRCUCB(N_CHANNELS, N_CLIENTS, history=128), env_fl, loss_fn)
+    state = trainer.init(params, KEY)
+    for t in range(150):
+        bx, by = loader.next_round()
+        state, mets = trainer.round(state, jnp.asarray(bx), jnp.asarray(by),
+                                    jax.random.fold_in(KEY, t))
+        if t % 30 == 0:
+            print(f"  round {t:3d}  local_loss={float(mets['local_loss']):.3f}  "
+                  f"|S_t|={int(mets['n_success'])}  "
+                  f"mean_aoi={float(mets['mean_aoi']):.2f}  "
+                  f"beta_t={float(mets['beta_t']):.2f}")
+
+    h = jax.nn.relu(jnp.asarray(tx) @ state.params["w1"] + state.params["b1"])
+    acc = float(jnp.mean(jnp.argmax(h @ state.params["w2"] + state.params["b2"], 1)
+                         == jnp.asarray(ty)))
+    print(f"\n  final test accuracy: {acc:.3f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

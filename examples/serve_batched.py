@@ -1,0 +1,70 @@
+"""End-to-end serving driver: batched decode with ring-cache long context.
+
+Builds a small decoder, prefills a batch of prompts, then serves new
+tokens with the production ``make_serve_step`` — including the
+sliding-window ring cache that makes the 500k-context dry-run shape
+feasible for full-attention architectures.
+
+Usage:
+  PYTHONPATH=src python examples/serve_batched.py [--arch qwen1.5-0.5b]
+                                                  [--tokens 48] [--window 64]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.launch.steps import make_serve_step
+from repro.models import build_model
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b",
+                    choices=[a for a in list_archs() if a != "hubert-xlarge"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--window", type=int, default=0,
+                    help=">0: serve through a ring cache of this width")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    model = build_model(cfg, remat="none")
+    params, _ = model.init(KEY)
+    print(f"serving {cfg.name} ({cfg.arch_type}); batch={args.batch}, "
+          f"window={'full' if args.window == 0 else args.window}")
+
+    total = args.prompt_len + args.tokens
+    cache = model.init_cache(args.batch, total, window=args.window or None)
+    serve = jax.jit(make_serve_step(model, window=args.window))
+
+    # "prefill" by teacher-forcing the prompt through the decode path (the
+    # smoke model is small; the 32k prefill path is exercised by the dry-run)
+    prompt = jax.random.randint(KEY, (args.batch, args.prompt_len),
+                                0, cfg.vocab_size)
+    tok = prompt[:, 0]
+    for t in range(1, args.prompt_len):
+        _, cache = serve(params, cache, tok)
+        tok = prompt[:, t]
+
+    t0 = time.time()
+    generated = []
+    for _ in range(args.tokens):
+        tok, cache = serve(params, cache, tok)
+        generated.append(tok)
+    dt = time.time() - t0
+    gen = jnp.stack(generated, axis=1)
+    print(f"generated {args.tokens} tokens x {args.batch} seqs in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s)")
+    print("sample token ids:", gen[0, :16].tolist())
+    print(f"cache position: {int(cache['pos'])} (physical cache length "
+          f"{'= window (ring)' if args.window else '= context'})")
+
+
+if __name__ == "__main__":
+    main()

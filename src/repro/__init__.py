@@ -1,0 +1,22 @@
+"""repro — MAB-based channel scheduling for asynchronous federated learning.
+
+A production-grade JAX framework reproducing and extending:
+
+  "MAB-Based Channel Scheduling for Asynchronous Federated Learning in
+   Non-Stationary Environments" (Li, Yang, Yang, Wu, Guo, Hu — 2025).
+
+Package map
+-----------
+core/      the paper's contribution: channel envs, AoI, bandit schedulers
+           (M-Exp3, GLR-CUCB, AoI-aware), regret harness, adaptive matching
+fl/        asynchronous federated-learning runtime (Steps 1-4 of Sec. II-A)
+models/    composable transformer zoo (GQA/MLA/MoE/SSD/RG-LRU/encoder)
+kernels/   Pallas TPU kernels (glr_scan, weighted_aggregate, flash_attention)
+data/      synthetic datasets + Dirichlet non-IID partitioner
+optim/     pure-JAX optimizers (SGD, AdamW) with sharded states
+configs/   the 10 assigned architectures + the paper's own FL models
+launch/    production mesh, multi-pod dry-run, train/serve drivers
+utils/     pytree helpers, HLO collective parser, roofline model
+"""
+
+__version__ = "1.0.0"

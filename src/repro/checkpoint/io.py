@@ -1,0 +1,85 @@
+"""Flat-pytree checkpointing: npz payload + json manifest.
+
+Handles the framework's flat ``{path: array}`` parameter dicts as well as
+arbitrary nested pytrees (optimizer / FL / bandit state) by flattening with
+'/'-joined key paths.  Writes are atomic (tmp + rename) so an interrupted
+save never corrupts the latest checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"step_(\d+)\.npz$")
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.astype(np.float32)   # lossless widening; npz-portable
+        flat[key or "_root"] = arr
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    treedef = jax.tree_util.tree_structure(tree)
+    path = os.path.join(directory, f"step_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, path)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": sorted(flat.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+    }
+    with open(os.path.join(directory, f"step_{step}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def restore_checkpoint(directory: str, step: Optional[int] = None, like: Any = None):
+    """Restore; if ``like`` is given, unflatten into its structure/dtypes."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    with np.load(os.path.join(directory, f"step_{step}.npz")) as data:
+        flat = {k: data[k] for k in data.files}
+    if like is None:
+        return flat, step
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path) or "_root"
+        arr = flat[key]
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out
+    ), step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(directory)
+        if (m := _STEP_RE.search(f))
+    ]
+    return max(steps) if steps else None

@@ -1,0 +1,40 @@
+"""hubert-xlarge [audio] — encoder-only masked-unit prediction.
+[arXiv:2106.07447]
+
+48L d_model=1280 16H (kv=16) d_ff=5120 vocab=504 (k-means unit codebook).
+The mel/conv feature extractor is a stub per the assignment carve-out:
+``input_specs()`` provides frame embeddings (B, T, d_model); training is
+masked-frame cluster-ID prediction.  Encoder-only => no decode shapes
+(see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab_size=504,
+    attention="gqa",
+    is_encoder=True,
+    mlp_act="gelu",
+    mask_prob=0.08,
+    citation="arXiv:2106.07447",
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke",
+    arch_type="audio",
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab_size=64,
+    attention="gqa",
+    is_encoder=True,
+    mlp_act="gelu",
+)

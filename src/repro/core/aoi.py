@@ -1,0 +1,63 @@
+"""Age-of-Information accounting (Sec. II-A, Eq. 4/8; Sec. V, Eq. 36-38).
+
+AoI of client ``i`` at round ``t`` is ``a_i(t) = t - h_i(t)`` where
+``h_i(t)`` is the last round in which the client's update reached the
+server.  The recursive form (Eq. 8) is::
+
+    a_i(t) = 1              if i in S_t   (success this round)
+           = a_i(t-1) + 1   otherwise
+
+All functions are pure and jittable; an FL round updates AoI inside the
+compiled step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_aoi(n_clients: int) -> jnp.ndarray:
+    """Paper convention: a_i(0) = 1 for all clients."""
+    return jnp.ones((n_clients,), jnp.float32)
+
+
+def update_aoi(aoi: jnp.ndarray, success: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8.  ``success``: (M,) bool/0-1 mask of clients in S_t."""
+    success = success.astype(bool)
+    return jnp.where(success, 1.0, aoi + 1.0)
+
+
+def mean_aoi(aoi: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(aoi)
+
+
+def aoi_variance(aoi: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 37: V_t = sum_i (a_i - mean)^2 (sum, not mean — as in the paper)."""
+    return jnp.sum((aoi - jnp.mean(aoi)) ** 2)
+
+
+def normalized_aoi_variance(v_t: jnp.ndarray, v_max: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 36: Ṽ_t = V_t / max_{0<τ<t} V_τ  (``v_max`` is the running max)."""
+    return jnp.where(v_max > 0, v_t / v_max, 0.0)
+
+
+def normalized_aoi(aoi: jnp.ndarray, a_max: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 38: ã_i(t) = a_i(t) / max historical AoI across clients/rounds."""
+    return jnp.where(a_max > 0, aoi / a_max, 0.0)
+
+
+def expected_aoi_from_means(mu_seq: jnp.ndarray) -> jnp.ndarray:
+    """Lemma 2: E[a_i(t)] = Σ_τ Π_{k=0..τ} (1 - μ_{s_i(t-k)}).
+
+    ``mu_seq``: (H,) the success means of the channels scheduled to the
+    client over the last H rounds, most-recent first.  The series is
+    truncated at H terms (geometric tail is negligible for H ≫ 1/μ_min).
+    """
+    one_minus = 1.0 - mu_seq
+    prods = jnp.cumprod(one_minus)
+    return jnp.sum(prods)
+
+
+def oracle_stationary_aoi(mu_best: jnp.ndarray) -> jnp.ndarray:
+    """Closed form for a fixed channel of mean μ: E[AoI] = 1/μ (Eq. 59)."""
+    return 1.0 / jnp.maximum(mu_best, 1e-12)

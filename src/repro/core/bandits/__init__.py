@@ -1,0 +1,20 @@
+from repro.core.bandits.base import Scheduler, combinations_array
+from repro.core.bandits.mexp3 import MExp3
+from repro.core.bandits.glr_cucb import GLRCUCB, glr_statistic, bernoulli_kl
+from repro.core.bandits.aoi_aware import AoIAware
+from repro.core.bandits.random_policy import RandomScheduler
+from repro.core.bandits.round_robin import RoundRobinScheduler
+from repro.core.bandits.oracle import oracle_assign
+
+__all__ = [
+    "Scheduler",
+    "combinations_array",
+    "MExp3",
+    "GLRCUCB",
+    "glr_statistic",
+    "bernoulli_kl",
+    "AoIAware",
+    "RandomScheduler",
+    "RoundRobinScheduler",
+    "oracle_assign",
+]

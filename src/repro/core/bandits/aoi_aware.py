@@ -1,0 +1,110 @@
+"""AoI-Aware (AA) scheduling variants (Sec. IV, last paragraph; Sec. VI-B).
+
+Wraps any base scheduler.  Each round the wrapper computes the threshold
+
+    h(t) = 1 / max_k  mu_hat_k(t)        (inverse of the best empirical mean)
+
+and, if any client's AoI exceeds h(t), switches from exploration to pure
+exploitation: the M channels with the highest historical success rates are
+scheduled, best channels going to the most-starved (highest-AoI) clients.
+Otherwise the base policy runs unchanged.  The base state keeps being
+updated in both branches so exploration statistics stay consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AoIAwareState(NamedTuple):
+    base: Any
+    mu_sum: jnp.ndarray    # (N,) discounted reward sums (wrapper's own
+    pulls: jnp.ndarray     # (N,) discounted pull counts  bookkeeping, survives
+    exploit_rounds: jnp.ndarray  # base restarts); scalar — AA-branch firings
+
+
+@dataclasses.dataclass(frozen=True)
+class AoIAware:
+    base: Any                      # the wrapped Scheduler
+    threshold_scale: float = 1.0   # h(t) = scale / max mu_hat
+    discount: float = 0.9        # recency discounting of the historical means:
+                                   # under non-stationary channels an all-history
+                                   # mean goes stale and the exploitation branch
+                                   # can dead-lock onto a dead channel
+
+    @property
+    def n_channels(self) -> int:
+        return self.base.n_channels
+
+    @property
+    def n_clients(self) -> int:
+        return self.base.n_clients
+
+    @property
+    def name(self) -> str:
+        return f"aa-{self.base.name}"
+
+    # ------------------------------------------------------------------ api
+    def init(self, key: jax.Array) -> AoIAwareState:
+        n = self.n_channels
+        return AoIAwareState(
+            base=self.base.init(key),
+            mu_sum=jnp.zeros((n,), jnp.float32),
+            pulls=jnp.zeros((n,), jnp.float32),
+            exploit_rounds=jnp.zeros((), jnp.int32),
+        )
+
+    def _mu_hat(self, state: AoIAwareState) -> jnp.ndarray:
+        return state.mu_sum / jnp.maximum(state.pulls, 1.0)
+
+    def select(
+        self, state: AoIAwareState, t: jnp.ndarray, key: jax.Array, aoi: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, Any]:
+        m = self.n_clients
+        mu_hat = self._mu_hat(state)
+        h_t = self.threshold_scale / jnp.maximum(jnp.max(mu_hat), 1e-6)
+        exploit = jnp.max(aoi) > h_t
+
+        base_channels, base_aux = self.base.select(state.base, t, key, aoi)
+
+        # Exploitation branch: schedule the M channels with the highest
+        # (recency-discounted) empirical means; best channels go to the
+        # most-starved clients (the per-client rule of Sec. VI-B, resolved
+        # jointly so channel assignments stay collision-free).
+        best = jnp.argsort(-mu_hat)[:m]                  # best..worst channels
+        starved = jnp.argsort(-aoi)                      # highest-AoI clients first
+        exploit_channels = jnp.zeros((m,), base_channels.dtype)
+        exploit_channels = exploit_channels.at[starved].set(best.astype(base_channels.dtype))
+
+        channels = jnp.where(exploit, exploit_channels, base_channels)
+        return channels, (base_aux, exploit)
+
+    def update(
+        self,
+        state: AoIAwareState,
+        t: jnp.ndarray,
+        channels: jnp.ndarray,
+        rewards: jnp.ndarray,
+        aux: Any,
+    ) -> AoIAwareState:
+        base_aux, exploited = aux
+        # Feed observations to the base policy regardless of which branch
+        # chose them (semi-bandit feedback is policy-agnostic).
+        new_base = self.base.update(state.base, t, channels, rewards, base_aux)
+        rho = self.discount
+        sched = jnp.zeros_like(state.pulls).at[channels].set(1.0)
+        r_vec = jnp.zeros_like(state.mu_sum).at[channels].set(rewards)
+        mu_sum = rho * state.mu_sum + r_vec
+        pulls = rho * state.pulls + sched
+        return AoIAwareState(
+            base=new_base,
+            mu_sum=mu_sum,
+            pulls=pulls,
+            exploit_rounds=state.exploit_rounds + exploited.astype(jnp.int32),
+        )
+
+    def channel_scores(self, state: AoIAwareState, t: jnp.ndarray) -> jnp.ndarray:
+        return self.base.channel_scores(state.base, t)

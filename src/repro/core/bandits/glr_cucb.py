@@ -1,0 +1,184 @@
+"""GLR-CUCB (Algorithm 2) — piecewise-stationary channel scheduling.
+
+Combinatorial-UCB schedules the M highest-UCB channels each round
+(Eq. 30); a Generalized-Likelihood-Ratio change-point detector watches
+the per-channel reward streams and restarts the bandit when a breakpoint
+is detected.  With the restart schedule, Thm. 5 gives AoI regret
+``O(M sqrt(C_T N T log^3 T))`` (known C_T) / ``O(M C_T sqrt(N T log^3 T))``
+(unknown).
+
+The GLR statistic for a stream z_1..z_n is
+
+    gamma = sup_{1 <= s < n}  s * kl(mean(z_1..s), mean(z_1..n))
+                            + (n-s) * kl(mean(z_s+1..n), mean(z_1..n))
+
+evaluated against the threshold beta(n, delta) = (1 + 1/n) log(3 n sqrt(n) / delta).
+All split points are evaluated at once from a prefix-sum (O(n) per channel
+per round) — this is the compute hot-spot that `repro.kernels.glr_scan`
+implements as a Pallas TPU kernel; the pure-jnp form below is its oracle
+and the CPU execution path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits.base import rotate_assignment
+
+_EPS = 1e-6  # float32-safe: 1.0 - 1e-9 rounds to 1.0 and poisons KL with 0*log(0)
+
+
+def bernoulli_kl(p: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """KL(Ber(p) || Ber(q)) with clipping for numerical safety."""
+    p = jnp.clip(p, _EPS, 1.0 - _EPS)
+    q = jnp.clip(q, _EPS, 1.0 - _EPS)
+    return p * jnp.log(p / q) + (1.0 - p) * jnp.log((1.0 - p) / (1.0 - q))
+
+
+def glr_statistic(history: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """GLR change-point statistic over the first ``n`` entries of ``history``.
+
+    history: (H,) reward stream (entries >= n are ignored).
+    n:       scalar int — number of valid samples.
+    Returns the sup over split points s in [1, n-1]; -inf when n < 2.
+    """
+    h = history.shape[0]
+    idx = jnp.arange(h)
+    masked = jnp.where(idx < n, history, 0.0)
+    prefix = jnp.cumsum(masked)
+    total = jnp.sum(masked)
+    s = idx + 1                                   # split point s = 1..H
+    n_f = n.astype(jnp.float32)
+    s_f = s.astype(jnp.float32)
+    mu_all = total / jnp.maximum(n_f, 1.0)
+    mu_a = prefix / s_f
+    mu_b = (total - prefix) / jnp.maximum(n_f - s_f, 1.0)
+    stat = s_f * bernoulli_kl(mu_a, mu_all) + (n_f - s_f) * bernoulli_kl(mu_b, mu_all)
+    valid = (s >= 1) & (s <= n - 1)
+    return jnp.max(jnp.where(valid, stat, -jnp.inf))
+
+
+def glr_threshold(n: jnp.ndarray, delta: float) -> jnp.ndarray:
+    """beta(n, delta) = (1 + 1/n) log(3 n sqrt(n) / delta)."""
+    n_f = jnp.maximum(n.astype(jnp.float32), 1.0)
+    return (1.0 + 1.0 / n_f) * jnp.log(3.0 * n_f * jnp.sqrt(n_f) / delta)
+
+
+class GLRCUCBState(NamedTuple):
+    mu_tilde: jnp.ndarray   # (N,) empirical means since last restart
+    counts: jnp.ndarray     # (N,) D_i — observations since last restart
+    tau: jnp.ndarray        # scalar int — last restart round
+    hist: jnp.ndarray       # (N, H) reward streams since restart (ring when full)
+    restarts: jnp.ndarray   # scalar int — number of detected change points
+
+
+@dataclasses.dataclass(frozen=True)
+class GLRCUCB:
+    n_channels: int
+    n_clients: int
+    delta: float = 1e-3          # GLR confidence
+    alpha: float = 0.0           # forced-exploration rate (paper: 0.05*sqrt(logT/T))
+    history: int = 2048          # H — per-channel stream buffer (ring once full)
+    detector_stride: int = 1     # run the GLR detector every k rounds
+    min_samples: int = 8         # don't test before this many samples
+    name: str = "glr-cucb"
+
+    # ------------------------------------------------------------------ api
+    def init(self, key: jax.Array) -> GLRCUCBState:
+        n, h = self.n_channels, self.history
+        return GLRCUCBState(
+            mu_tilde=jnp.zeros((n,), jnp.float32),
+            counts=jnp.zeros((n,), jnp.float32),
+            tau=jnp.zeros((), jnp.int32),
+            hist=jnp.zeros((n, h), jnp.float32),
+            restarts=jnp.zeros((), jnp.int32),
+        )
+
+    def ucb(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
+        """Eq. 30: mu_tilde + sqrt(3 log(t - tau) / (2 D)); +inf for unseen arms."""
+        since = jnp.maximum((t - state.tau).astype(jnp.float32), 2.0)
+        bonus = jnp.sqrt(3.0 * jnp.log(since) / (2.0 * jnp.maximum(state.counts, 1.0)))
+        ucb = state.mu_tilde + bonus
+        return jnp.where(state.counts > 0, ucb, jnp.inf)
+
+    def select(
+        self, state: GLRCUCBState, t: jnp.ndarray, key: jax.Array, aoi: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        n, m = self.n_channels, self.n_clients
+        ucb = self.ucb(state, t)
+        # tie-break unseen arms randomly so initial exploration is unbiased
+        noise = jax.random.uniform(key, (n,)) * 1e-6
+        order = jnp.argsort(-(jnp.where(jnp.isinf(ucb), 1e9, ucb) + noise))
+        top = order[:m]
+        # forced exploration (Alg. 2 line 3): at rate alpha, make sure channel
+        # i = (t - tau) mod floor(N / alpha) is scheduled when i < N.
+        if self.alpha > 0:
+            period = max(int(n / self.alpha), n)
+            slot = (t - state.tau) % period
+            forced = slot < n
+            present = jnp.any(top == slot)
+            top = jnp.where(
+                forced & ~present,
+                top.at[m - 1].set(slot.astype(top.dtype)),
+                top,
+            )
+        channels = rotate_assignment(top, t, m)
+        return channels, jnp.zeros((), jnp.int32)
+
+    def update(
+        self,
+        state: GLRCUCBState,
+        t: jnp.ndarray,
+        channels: jnp.ndarray,
+        rewards: jnp.ndarray,
+        aux: jnp.ndarray,
+    ) -> GLRCUCBState:
+        n, h = self.n_channels, self.history
+        sched = jnp.zeros((n,), bool).at[channels].set(True)
+        r_vec = jnp.zeros((n,), jnp.float32).at[channels].set(rewards)
+
+        d_prev = state.counts
+        mu = jnp.where(
+            sched,
+            (state.mu_tilde * d_prev + r_vec) / (d_prev + 1.0),
+            state.mu_tilde,
+        )
+        counts = jnp.where(sched, d_prev + 1.0, d_prev)
+
+        # history write: append at D_prev, or ring-shift when the buffer is full
+        full = d_prev >= h
+        writepos = jnp.clip(d_prev.astype(jnp.int32), 0, h - 1)
+        onehot = jax.nn.one_hot(writepos, h, dtype=jnp.float32)
+        appended = state.hist * (1.0 - onehot) + r_vec[:, None] * onehot
+        rolled = jnp.concatenate([state.hist[:, 1:], r_vec[:, None]], axis=1)
+        new_hist = jnp.where(
+            sched[:, None],
+            jnp.where(full[:, None], rolled, appended),
+            state.hist,
+        )
+
+        def run_detector(_):
+            n_valid = jnp.minimum(counts, float(h)).astype(jnp.int32)
+            stats = jax.vmap(glr_statistic)(new_hist, n_valid)
+            thresh = glr_threshold(n_valid, self.delta)
+            fire = sched & (stats >= thresh) & (n_valid >= self.min_samples)
+            return jnp.any(fire)
+
+        stride_ok = (t % self.detector_stride) == 0
+        change = jax.lax.cond(stride_ok, run_detector, lambda _: jnp.array(False), None)
+
+        # restart (Alg. 2 line 21): D_i = 0 for all i, tau <- t
+        mu = jnp.where(change, jnp.zeros_like(mu), mu)
+        counts = jnp.where(change, jnp.zeros_like(counts), counts)
+        new_hist = jnp.where(change, jnp.zeros_like(new_hist), new_hist)
+        tau = jnp.where(change, t.astype(jnp.int32), state.tau)
+        restarts = state.restarts + change.astype(jnp.int32)
+        return GLRCUCBState(mu, counts, tau, new_hist, restarts)
+
+    def channel_scores(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
+        """UCB values (Eq. 30) rank channels for the Sec.-V matcher."""
+        ucb = self.ucb(state, t)
+        return jnp.where(jnp.isinf(ucb), 1e9, ucb)

@@ -1,0 +1,42 @@
+"""Random scheduling baseline (the paper's comparison policy, Sec. VI-A)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RandomState(NamedTuple):
+    mu_sum: jnp.ndarray
+    pulls: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RandomScheduler:
+    n_channels: int
+    n_clients: int
+    name: str = "random"
+
+    def init(self, key: jax.Array) -> RandomState:
+        n = self.n_channels
+        return RandomState(
+            mu_sum=jnp.zeros((n,), jnp.float32),
+            pulls=jnp.zeros((n,), jnp.float32),
+        )
+
+    def select(
+        self, state: RandomState, t: jnp.ndarray, key: jax.Array, aoi: jnp.ndarray
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        perm = jax.random.permutation(key, self.n_channels)
+        return perm[: self.n_clients], jnp.zeros((), jnp.int32)
+
+    def update(self, state, t, channels, rewards, aux) -> RandomState:
+        return RandomState(
+            mu_sum=state.mu_sum.at[channels].add(rewards),
+            pulls=state.pulls.at[channels].add(1.0),
+        )
+
+    def channel_scores(self, state: RandomState, t: jnp.ndarray) -> jnp.ndarray:
+        return state.mu_sum / jnp.maximum(state.pulls, 1.0)

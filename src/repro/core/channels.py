@@ -1,0 +1,184 @@
+"""Non-stationary wireless channel environments (Sec. II-B).
+
+The spectrum is divided into ``N`` orthogonal Bernoulli sub-channels with
+state Good (1) / Bad (0).  Three regimes are modelled, all with a uniform
+jittable interface so a full simulation (T = 20000 rounds in the paper)
+runs as a single ``lax.scan``:
+
+* stationary           — fixed unknown means ``mu_k``
+* piecewise-stationary — means constant within segments, abrupt changes at
+                          unknown breakpoints (the GLR-CUCB scenario)
+* adversarial          — an arbitrary pre-determined Good/Bad table, no
+                          statistical structure (the M-Exp3 scenario)
+
+``ChannelEnv`` is a registered pytree: static structure + array fields, so
+it can be closed over or passed through ``jit``/``scan`` freely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ChannelEnv:
+    """Unified non-stationary channel environment.
+
+    Attributes
+    ----------
+    kind: one of "stationary" | "piecewise" | "adversarial" (static).
+    means: (S, N) per-segment Bernoulli means.  S=1 for stationary.
+    breaks: (S-1,) ascending breakpoint rounds (segment s covers
+        ``[breaks[s-1], breaks[s])``).  Empty for stationary.
+    table: (T, N) uint8 Good/Bad table for the adversarial regime, else a
+        (0, N) placeholder.
+    """
+
+    kind: str
+    means: jnp.ndarray
+    breaks: jnp.ndarray
+    table: jnp.ndarray
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.means, self.breaks, self.table), (self.kind,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        means, breaks, table = children
+        return cls(aux[0], means, breaks, table)
+
+    # -- properties --------------------------------------------------------
+    @property
+    def n_channels(self) -> int:
+        return self.means.shape[-1] if self.kind != "adversarial" else self.table.shape[-1]
+
+    @property
+    def n_segments(self) -> int:
+        return self.means.shape[0]
+
+    # -- behaviour ---------------------------------------------------------
+    def means_at(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Instantaneous per-channel success means ``mu_k(t)`` — (N,)."""
+        if self.kind == "adversarial":
+            # Adversarial state is deterministic: the "mean" is the state.
+            return self.table[t].astype(jnp.float32)
+        if self.kind == "stationary":
+            return self.means[0]
+        seg = jnp.searchsorted(self.breaks, t, side="right")
+        return self.means[seg]
+
+    def sample(self, t: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """Draw the Good/Bad state of all N channels in round ``t`` — (N,) f32 in {0,1}."""
+        if self.kind == "adversarial":
+            return self.table[t].astype(jnp.float32)
+        mu = self.means_at(t)
+        return jax.random.bernoulli(key, mu).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+def make_stationary(mus) -> ChannelEnv:
+    mus = jnp.asarray(mus, jnp.float32)
+    return ChannelEnv(
+        kind="stationary",
+        means=mus[None, :],
+        breaks=jnp.zeros((0,), jnp.int32),
+        table=jnp.zeros((0, mus.shape[0]), jnp.uint8),
+    )
+
+
+def make_piecewise(segment_means, breakpoints) -> ChannelEnv:
+    """``segment_means``: (S, N); ``breakpoints``: (S-1,) ascending rounds."""
+    segment_means = jnp.asarray(segment_means, jnp.float32)
+    breakpoints = jnp.asarray(breakpoints, jnp.int32)
+    assert segment_means.ndim == 2
+    assert breakpoints.shape[0] == segment_means.shape[0] - 1
+    return ChannelEnv(
+        kind="piecewise",
+        means=segment_means,
+        breaks=breakpoints,
+        table=jnp.zeros((0, segment_means.shape[1]), jnp.uint8),
+    )
+
+
+def make_adversarial(table) -> ChannelEnv:
+    """``table``: (T, N) 0/1 pre-determined state sequence."""
+    table = jnp.asarray(table, jnp.uint8)
+    return ChannelEnv(
+        kind="adversarial",
+        means=jnp.zeros((1, table.shape[1]), jnp.float32),
+        breaks=jnp.zeros((0,), jnp.int32),
+        table=table,
+    )
+
+
+# ---------------------------------------------------------------------------
+# random scenario generators (used by benchmarks / tests / examples)
+# ---------------------------------------------------------------------------
+
+def random_piecewise_env(
+    key: jax.Array,
+    n_channels: int,
+    horizon: int,
+    n_breakpoints: int,
+    mean_low: float = 0.1,
+    mean_high: float = 0.9,
+    min_gap: float = 0.05,
+) -> ChannelEnv:
+    """A piecewise-stationary env with ``n_breakpoints`` abrupt mean changes.
+
+    Segment means are drawn uniformly in [mean_low, mean_high] with channels
+    kept at least ``min_gap`` apart in expectation so an M-best set exists.
+    """
+    k1, k2 = jax.random.split(key)
+    n_seg = n_breakpoints + 1
+    means = jax.random.uniform(
+        k1, (n_seg, n_channels), minval=mean_low, maxval=mean_high
+    )
+    # nudge channels apart (deterministic per-channel offset, wrapped)
+    offs = jnp.linspace(0.0, min_gap * n_channels, n_channels, endpoint=False)
+    means = jnp.clip(means + offs[None, :] * 0.0 + 0.0, mean_low, mean_high)
+    if n_breakpoints > 0:
+        # evenly spread breakpoints with random jitter, strictly inside (0, T)
+        base = np.linspace(0, horizon, n_seg + 1)[1:-1]
+        jitter = jax.random.uniform(
+            k2, (n_breakpoints,), minval=-0.25, maxval=0.25
+        ) * (horizon / n_seg)
+        brk = jnp.clip(jnp.asarray(base) + jitter, 1, horizon - 1).astype(jnp.int32)
+        brk = jnp.sort(brk)
+    else:
+        brk = jnp.zeros((0,), jnp.int32)
+    return make_piecewise(means, brk)
+
+
+def random_adversarial_env(
+    key: jax.Array,
+    n_channels: int,
+    horizon: int,
+    flip_prob: float = 0.01,
+    good_frac: float = 0.5,
+) -> ChannelEnv:
+    """An 'extremely non-stationary' env: a Markov-flipping Good/Bad table.
+
+    The adversary pre-commits the full (T, N) table; states persist but flip
+    with probability ``flip_prob`` per round per channel, starting from a
+    random assignment with ``good_frac`` channels Good.  No per-round i.i.d.
+    structure — exactly the regime where only adversarial-bandit guarantees
+    (M-Exp3) apply.
+    """
+    k0, k1 = jax.random.split(key)
+    start = jax.random.bernoulli(k0, good_frac, (n_channels,))
+    flips = jax.random.bernoulli(k1, flip_prob, (horizon, n_channels))
+    # state_t = start XOR (cumulative parity of flips up to t)
+    parity = jnp.cumsum(flips.astype(jnp.int32), axis=0) % 2
+    table = jnp.logical_xor(start[None, :], parity.astype(bool))
+    return make_adversarial(table.astype(jnp.uint8))

@@ -1,0 +1,7 @@
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import (
+    SyntheticClassification,
+    synthetic_lm_batches,
+    make_federated_classification,
+)
+from repro.data.pipeline import FederatedLoader

@@ -1,0 +1,2 @@
+from repro.fl.client import local_sgd
+from repro.fl.round import AsyncFLConfig, AsyncFLState, AsyncFLTrainer

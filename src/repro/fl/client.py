@@ -1,0 +1,36 @@
+"""Client-side local training (Step 2, Eq. 5).
+
+``local_sgd`` runs E mini-batch SGD steps from the received global model
+and returns the *cumulative update*  G~ = (w^0 - w^E) / eta  (Eq. 6).
+The function is pure so the server runtime vmaps it over all clients —
+one FL round (all clients' local epochs included) is a single XLA program.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_sgd(
+    loss_fn: Callable[[Any, jnp.ndarray, jnp.ndarray], jnp.ndarray],
+    params: Any,
+    batches_x: jnp.ndarray,     # (E, B, ...)
+    batches_y: jnp.ndarray,     # (E, B)
+    lr: float,
+) -> Tuple[Any, jnp.ndarray]:
+    """Returns (cumulative_update G~ [same pytree as params], final local loss)."""
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(w, batch):
+        x, y = batch
+        loss, g = grad_fn(w, x, y)
+        w = jax.tree_util.tree_map(lambda p, gi: p - lr * gi, w, g)
+        return w, loss
+
+    w_final, losses = jax.lax.scan(step, params, (batches_x, batches_y))
+    g_tilde = jax.tree_util.tree_map(
+        lambda w0, we: (w0 - we) / lr, params, w_final)
+    return g_tilde, losses[-1]

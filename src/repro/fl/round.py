@@ -1,0 +1,180 @@
+"""Asynchronous FL round runtime (Sec. II-A Steps 1-4 + Sec. IV/V policies).
+
+One round, entirely inside jit:
+
+  Step 1  clients in S_{t-1} receive w_t (everyone else trains nothing and
+          keeps its buffered update G~, Eq. 6)
+  Step 2  E local SGD epochs, vmapped over clients (Eq. 5)
+  Step 3  MAB scheduler picks M channels; the adaptive matcher assigns
+          them to clients by priority (Eq. 39-40); the channel env draws
+          Good/Bad; S_t = clients whose channel was Good
+  Step 4  server aggregates  w <- w - eta_s/|S_t| * sum_{i in S_t} zeta_i G~_i
+          via the fused `weighted_aggregate` kernel (Eq. 7), updates AoI
+          (Eq. 8), the contribution buffers (Eq. 41-42), zeta (Eq. 43)
+          and the bandit statistics.
+
+Client updates are carried *flattened* (M, P) — the same layout the
+contribution estimator needs, and the layout the Pallas aggregation
+kernel consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aoi import init_aoi, update_aoi, aoi_variance
+from repro.core.contribution import (
+    ContributionBuffer,
+    aggregation_weights,
+    init_buffer,
+    marginal_contribution,
+    update_buffer,
+)
+from repro.core.matching import AdaptiveMatcher, MatcherState
+from repro.fl.client import local_sgd
+from repro.kernels import ops
+from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
+
+
+class AsyncFLState(NamedTuple):
+    params: Any                    # global model w_t
+    buffers: jnp.ndarray           # (M, P) flattened G~_i (Eq. 6)
+    has_update: jnp.ndarray        # (M,) G~ validity
+    last_success: jnp.ndarray      # (M,) S_{t-1} indicator
+    aoi: jnp.ndarray               # (M,)
+    contrib_buf: ContributionBuffer
+    contrib: jnp.ndarray           # (M,) C~
+    zeta: jnp.ndarray              # (M,) aggregation weights
+    sched_state: Any
+    matcher_state: MatcherState
+    t: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncFLConfig:
+    n_clients: int
+    n_channels: int
+    local_epochs: int = 1
+    client_lr: float = 0.05
+    server_lr: float = 0.05        # eta_s (Eq. 7 uses the raw G~ sum; see DESIGN)
+    matcher_beta: float = 0.5
+    use_matching: bool = True      # ablation switch (paper's "aware allocation")
+    use_zeta: bool = True          # ablation: Eq. 43 weights vs uniform
+
+
+@dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash, so the
+class AsyncFLTrainer:                          # jitted round caches per instance
+    cfg: AsyncFLConfig                         # (env holds arrays -> unhashable
+    scheduler: Any                 # a repro.core.bandits Scheduler   by value)
+    env: Any                       # a repro.core.channels ChannelEnv
+    loss_fn: Callable              # (params, x, y) -> scalar loss
+    proxy_loss_fn: Optional[Callable] = None  # flat params -> scalar (Eq. 35)
+
+    # ------------------------------------------------------------------ init
+    def init(self, params: Any, key: jax.Array) -> AsyncFLState:
+        m = self.cfg.n_clients
+        p = int(tree_flatten_concat(params).shape[0])
+        return AsyncFLState(
+            params=params,
+            buffers=jnp.zeros((m, p), jnp.float32),
+            has_update=jnp.zeros((m,), jnp.float32),
+            last_success=jnp.ones((m,), jnp.float32),   # round 0: all start fresh
+            aoi=init_aoi(m),
+            contrib_buf=init_buffer(m, p),
+            contrib=jnp.ones((m,), jnp.float32),
+            zeta=jnp.full((m,), 1.0 / m),
+            sched_state=self.scheduler.init(key),
+            matcher_state=AdaptiveMatcher(self.cfg.matcher_beta).init(),
+            t=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------ round
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def round(
+        self,
+        state: AsyncFLState,
+        batches_x: jnp.ndarray,    # (M, E, B, ...)
+        batches_y: jnp.ndarray,    # (M, E, B)
+        key: jax.Array,
+    ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        m = cfg.n_clients
+        k_env, k_sel = jax.random.split(key)
+        t = state.t
+
+        # ---- Steps 1-2: local training for clients in S_{t-1} ------------
+        def one_client(bx, by):
+            g_tree, loss = local_sgd(self.loss_fn, state.params, bx, by, cfg.client_lr)
+            return tree_flatten_concat(g_tree), loss
+
+        fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
+        active = state.last_success[:, None]
+        buffers = active * fresh_updates + (1.0 - active) * state.buffers   # Eq. 6
+        has_update = jnp.maximum(state.has_update, state.last_success)
+
+        # ---- Step 3: schedule + match + transmit ---------------------------
+        channels, aux = self.scheduler.select(state.sched_state, t, k_sel, state.aoi)
+        matcher = AdaptiveMatcher(cfg.matcher_beta)
+        if cfg.use_matching:
+            scores = self.scheduler.channel_scores(state.sched_state, t)
+            assignment, matcher_state = matcher.match(
+                state.matcher_state, channels, scores, state.contrib, state.aoi)
+        else:
+            assignment = channels
+            _, matcher_state = matcher.priorities(
+                state.matcher_state, state.contrib, state.aoi)
+        ch_states = self.env.sample(t, k_env)
+        success = (ch_states[assignment] > 0.5).astype(jnp.float32)
+        success = success * has_update        # a client with no update yet can't help
+        n_succ = jnp.sum(success)
+
+        # ---- Step 4: aggregate (Eq. 7, fused kernel) ------------------------
+        zeta = state.zeta if cfg.use_zeta else jnp.full((m,), 1.0 / m)
+        scale = success * zeta * (m / jnp.maximum(n_succ, 1.0))
+        agg_flat = ops.weighted_aggregate(buffers, scale)     # (P,) f32
+        step_vec = -cfg.server_lr / m * agg_flat              # normalized mean step
+        delta = tree_unflatten_concat(step_vec, state.params)
+        params = jax.tree_util.tree_map(
+            lambda p_, d: (p_ + d.astype(p_.dtype)), state.params, delta)
+
+        # ---- bookkeeping: AoI, bandit, contribution, zeta -------------------
+        aoi = update_aoi(state.aoi, success > 0.5)
+        rewards = ch_states[assignment]
+        sched_state = self.scheduler.update(
+            state.sched_state, t, assignment, rewards, aux)
+        # buffered params each client last trained from (for Eq. 42): current
+        # global params serve as the anchor — uploads happened this round.
+        params_flat = tree_flatten_concat(params)
+        contrib_buf = update_buffer(
+            state.contrib_buf, success > 0.5, buffers,
+            jnp.broadcast_to(params_flat, buffers.shape))
+        contrib = marginal_contribution(contrib_buf, zeta, self.proxy_loss_fn)
+        new_zeta = aggregation_weights(contrib)
+
+        new_state = AsyncFLState(
+            params=params,
+            buffers=buffers,
+            has_update=has_update,
+            last_success=success,
+            aoi=aoi,
+            contrib_buf=contrib_buf,
+            contrib=contrib,
+            zeta=new_zeta,
+            sched_state=sched_state,
+            matcher_state=matcher_state,
+            t=t + 1,
+        )
+        metrics = {
+            "local_loss": jnp.sum(local_losses * state.last_success)
+            / jnp.maximum(jnp.sum(state.last_success), 1.0),
+            "n_success": n_succ,
+            "mean_aoi": jnp.mean(aoi),
+            "aoi_var": aoi_variance(aoi),
+            "beta_t": matcher_state.beta_t,
+            "zeta_max": jnp.max(new_zeta),
+        }
+        return new_state, metrics

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+glr_scan           GLR change-point statistic (Alg. 2 detector inner loop)
+weighted_aggregate fused zeta-weighted masked client aggregation (Eq. 7)
+flash_attention    blockwise GQA attention for prefill (dense/MoE/VLM archs)
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py holds the jit'd
+public wrappers (interpret=True off-TPU).
+"""
+from repro.kernels import ops

@@ -1,0 +1,140 @@
+"""Pallas TPU kernel: blockwise (flash) grouped-query attention, forward.
+
+Prefill attention is the dominant compute term for the dense / MoE / VLM
+architectures (O(S^2 D) at seq 32k).  The kernel streams K/V through VMEM
+in (BK, D) tiles against a resident (BQ, D) query tile, maintaining the
+online-softmax running max / normalizer in VMEM scratch so logits never
+materialize in HBM.
+
+Grid: (batch, q_heads, S/BQ, S/BK) — the KV axis is innermost, revisiting
+the same output block; causal and sliding-window block-skipping gates the
+matmuls (upper-triangle blocks cost no MXU time).  GQA is expressed in the
+K/V BlockSpec index maps (q-head h reads kv-head h // group), so no
+repeat/broadcast of KV ever hits memory.
+
+Tiles default to 128x128 — MXU-aligned for bf16 — and the head dim is
+padded to a lane multiple by the `ops.py` wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+_NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int, seq_len: int, bq: int, bk: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- block-level skipping -------------------------------------------
+    q_first = qi * bq
+    q_last = q_first + bq - 1
+    k_first = kj * bk
+    k_last = k_first + bk - 1
+    run = k_first < seq_len                      # padded tail blocks
+    if causal:
+        run &= k_first <= q_last                 # above-diagonal blocks
+    if window > 0:
+        run &= k_last >= q_first - (window - 1)  # blocks left of the window
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)      # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (BK, D)
+        v = v_ref[0, 0].astype(jnp.float32)      # (BK, D)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                # (BQ, BK)
+
+        q_idx = q_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_first + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_idx < seq_len
+        if causal:
+            mask &= k_idx <= q_idx
+        if window > 0:
+            mask &= k_idx > q_idx - window
+        logits = jnp.where(mask, logits, _NEG_INF)
+
+        m_prev = m_scr[...]                      # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)              # (BQ, BK)
+        corr = jnp.exp(m_prev - m_new)           # (BQ, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,           # (B, Hq, S, D)  — D lane-aligned (pad in ops.py)
+    k: jnp.ndarray,           # (B, Hkv, S, D)
+    v: jnp.ndarray,           # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = float(scale) if scale is not None else float(1.0 / (d ** 0.5))
+
+    s_pad = (-s) % max(block_q, block_k)
+    if s_pad:
+        pad = ((0, 0), (0, 0), (0, s_pad), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    sp = s + s_pad
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        seq_len=s, bq=block_q, bk=block_k,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, sp // block_q, sp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, i, j, g=group: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]

@@ -1,0 +1,65 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On TPU the compiled kernels run natively; on CPU (this container, and any
+unit-test environment) they execute under ``interpret=True``, which runs
+the kernel body in Python with identical semantics.  Models and the FL
+runtime call these wrappers, never the kernels directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import glr_scan as _glr
+from repro.kernels import weighted_aggregate as _wa
+from repro.kernels import ref as ref  # re-export the oracles
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def glr_scan(hist: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """GLR change-point statistic per channel.  hist (N, H), counts (N,) -> (N,)."""
+    return _glr.glr_scan(hist, counts, interpret=_interpret())
+
+
+def weighted_aggregate(updates: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 7 fused masked aggregation.  updates (M, P), scale (M,) -> (P,) f32."""
+    return _wa.weighted_aggregate(updates, scale, interpret=_interpret())
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int | None = None,
+    block_k: int | None = None,
+) -> jnp.ndarray:
+    """Blockwise GQA attention.  q (B,Hq,S,D), k/v (B,Hkv,S,D) -> (B,Hq,S,D).
+
+    Pads the head dim to a 128-lane multiple (zero-padded dims contribute
+    nothing to q.k^T or the weighted value sum, so the result is exact) and
+    picks MXU-aligned default tile sizes.
+    """
+    d = q.shape[-1]
+    scale = float(scale) if scale is not None else float(1.0 / (d ** 0.5))
+    d_pad = (-d) % 128
+    if d_pad:
+        pad = ((0, 0), (0, 0), (0, 0), (0, d_pad))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    s = q.shape[2]
+    bq = block_q or min(_fa.DEFAULT_BLOCK_Q, max(8, s))
+    bk = block_k or min(_fa.DEFAULT_BLOCK_K, max(8, s))
+    out = _fa.flash_attention(
+        q, k, v,
+        causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=_interpret(),
+    )
+    return out[..., :d]

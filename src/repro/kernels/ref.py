@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-6  # float32-safe: 1.0 - 1e-9 rounds to 1.0 and poisons KL with 0*log(0)
+
+
+# ---------------------------------------------------------------------------
+# glr_scan
+# ---------------------------------------------------------------------------
+
+def bernoulli_kl(p, q):
+    p = jnp.clip(p, _EPS, 1.0 - _EPS)
+    q = jnp.clip(q, _EPS, 1.0 - _EPS)
+    return p * jnp.log(p / q) + (1.0 - p) * jnp.log((1.0 - p) / (1.0 - q))
+
+
+def glr_scan(hist: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
+    """GLR change-point statistic for each channel.
+
+    hist:   (N, H) reward streams (entries at index >= counts[i] ignored)
+    counts: (N,)   valid lengths
+    returns (N,) sup_s [ s*kl(mu_1:s, mu_1:n) + (n-s)*kl(mu_s+1:n, mu_1:n) ],
+    -inf where n < 2.
+    """
+    h = hist.shape[-1]
+    idx = jnp.arange(h)
+    n = counts.astype(jnp.int32)[:, None]                     # (N, 1)
+    masked = jnp.where(idx[None, :] < n, hist, 0.0)
+    prefix = jnp.cumsum(masked, axis=-1)
+    total = jnp.sum(masked, axis=-1, keepdims=True)
+    s = (idx + 1).astype(jnp.float32)[None, :]
+    n_f = n.astype(jnp.float32)
+    mu_all = total / jnp.maximum(n_f, 1.0)
+    mu_a = prefix / s
+    mu_b = (total - prefix) / jnp.maximum(n_f - s, 1.0)
+    stat = s * bernoulli_kl(mu_a, mu_all) + (n_f - s) * bernoulli_kl(mu_b, mu_all)
+    valid = (idx[None, :] + 1 >= 1) & (idx[None, :] + 1 <= n - 1)
+    return jnp.max(jnp.where(valid, stat, -jnp.inf), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# weighted_aggregate
+# ---------------------------------------------------------------------------
+
+def weighted_aggregate(updates: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 7 server aggregation: out[p] = sum_m scale[m] * updates[m, p].
+
+    updates: (M, P) client update matrix (any float dtype)
+    scale:   (M,)   pre-combined  mask * zeta / |S_t|  coefficients (f32)
+    returns (P,) f32 aggregate.
+    """
+    return jnp.sum(scale[:, None] * updates.astype(jnp.float32), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def mha_attention(
+    q: jnp.ndarray,          # (B, Hq, S, D)
+    k: jnp.ndarray,          # (B, Hkv, S, D)
+    v: jnp.ndarray,          # (B, Hkv, S, D)
+    causal: bool = True,
+    window: int = 0,         # 0 => full; else sliding window of this width
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Grouped-query attention oracle (naive O(S^2) reference)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    k_exp = jnp.repeat(k, group, axis=1)
+    v_exp = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k_exp.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v_exp.astype(jnp.float32))
+    return out.astype(q.dtype)

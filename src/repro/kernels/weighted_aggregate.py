@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: zeta-weighted masked client-update aggregation (Eq. 7).
+
+    w_{t+1} = w_t - (1/|S_t|) * sum_{i in S_t} zeta_i * G~_{i,t}
+
+The server-side reduction over M client updates is bandwidth-bound:
+M * P bytes in, P bytes out, ~2*M*P flops.  The kernel tiles the
+parameter axis into lane-aligned VMEM blocks with all M clients resident
+on sublanes, fusing the mask*zeta scaling into the fp32 accumulation so
+HBM sees each update element exactly once.
+
+Inputs
+  updates: (M, P) — client update matrix (bf16 or f32)
+  scale:   (M,)   — pre-combined  mask_i * zeta_i / |S_t|  coefficients
+Output
+  (P,) f32 aggregate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PARAM_BLOCK = 2048
+
+
+def _agg_kernel(updates_ref, scale_ref, out_ref):
+    upd = updates_ref[...].astype(jnp.float32)        # (M, Pb)
+    sc = scale_ref[...].astype(jnp.float32)           # (M, 1)
+    out_ref[...] = jnp.sum(upd * sc, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def weighted_aggregate(
+    updates: jnp.ndarray,
+    scale: jnp.ndarray,
+    interpret: bool = False,
+    block: int = PARAM_BLOCK,
+) -> jnp.ndarray:
+    """out[p] = sum_m scale[m] * updates[m, p] — fused masked aggregation."""
+    m, p = updates.shape
+    p_pad = (-p) % block
+    upd_p = jnp.pad(updates, ((0, 0), (0, p_pad)))
+    scale_col = scale.astype(jnp.float32)[:, None]
+
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=((p + p_pad) // block,),
+        in_specs=[
+            pl.BlockSpec((m, block), lambda i: (0, i)),
+            pl.BlockSpec((m, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, p + p_pad), jnp.float32),
+        interpret=interpret,
+    )(upd_p, scale_col)
+    return out[0, :p]

@@ -1,0 +1,290 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input-shape x mesh) combination this lowers and
+compiles the production step — the FL train round (train_4k), the prefill
+forward (prefill_32k) or the one-token serve step (decode_32k / long_500k)
+— against sharded ShapeDtypeStructs (no real allocation), then records
+
+  * compiled.memory_analysis()   (bytes per device -> proves it fits)
+  * compiled.cost_analysis()     (FLOPs / bytes    -> roofline terms)
+  * collective bytes parsed from the partitioned HLO
+  * the three-term roofline + bottleneck verdict (EXPERIMENTS.md)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+  python -m repro.launch.dryrun ... --out experiments/dryrun
+
+The 512 placeholder host devices exist ONLY here (the env var above must
+precede every jax import); smoke tests and benchmarks see 1 device.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core.bandits import GLRCUCB
+from repro.core.channels import make_stationary
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import param_shardings, replicated
+from repro.launch.specs import (
+    SHAPES,
+    batch_specs,
+    cache_specs,
+    decode_token_specs,
+    serve_window,
+    supported,
+)
+from repro.launch.steps import (
+    make_fl_train_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_state_init,
+)
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+from repro.utils.hlo import collective_bytes, count_ops
+from repro.utils.jaxpr_cost import step_cost
+from repro.utils.roofline import (
+    Roofline,
+    model_flops_forward,
+    model_flops_train,
+)
+
+N_CLIENTS = 16     # FL clients = data-parallel groups of one pod
+N_CHANNELS = 32    # sub-channels managed by the scheduler
+SCHED_HISTORY = 256
+
+
+def _sds_tree_with_shardings(init_fn, key_spec, shardings_fn):
+    """eval_shape an init fn and attach shardings produced by shardings_fn."""
+    shapes = jax.eval_shape(init_fn, key_spec)
+    return shardings_fn(shapes)
+
+
+def build_step_and_specs(arch: str, shape_name: str, mesh, remat: str = "full",
+                         layout: str = "tp", ce_chunk: int = 0,
+                         seq_shard: bool = False, microbatch: int = 1):
+    """Returns (step_fn, arg_specs tuple) ready for jit(...).lower(*specs)."""
+    from repro.launch.shardings import LAYOUTS
+    from repro.models.act_sharding import set_layout
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.mode == "decode":
+        layout = "tp"            # decode wants the tensor axis (latency + cache)
+    set_layout(layout)
+    rules = LAYOUTS[layout]
+    model = Model(cfg=cfg, remat=remat, ce_chunk=ce_chunk, seq_shard=seq_shard)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=replicated(mesh))
+
+    if shape.mode == "train":
+        scheduler = GLRCUCB(N_CHANNELS, N_CLIENTS, history=SCHED_HISTORY,
+                            detector_stride=8)
+        env = make_stationary(jnp.linspace(0.9, 0.3, N_CHANNELS))
+        optimizer = adamw(3e-4)
+        init_fn = make_train_state_init(model, optimizer, scheduler, N_CLIENTS)
+        state_shapes = jax.eval_shape(init_fn, key_sds)
+        # shardings: params + opt moments follow the logical specs; fl state
+        # is replicated
+        params_tmpl, specs = shape_params_with_specs(model, key_sds)
+        pshard = param_shardings(params_tmpl, specs, mesh, rules)
+
+        def attach(tree, path=()):
+            if isinstance(tree, dict):
+                return {k: attach(v, path + (k,)) for k, v in tree.items()}
+            return tree
+
+        def sds_with(tree, shard_map_):
+            return jax.tree_util.tree_map(
+                lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+                tree, shard_map_)
+
+        params_sds = sds_with(state_shapes.params, pshard)
+        mu_sds = sds_with(state_shapes.opt_state["mu"], pshard)
+        nu_sds = sds_with(state_shapes.opt_state["nu"], pshard)
+        rep = replicated(mesh)
+        fl_sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep),
+            state_shapes.fl)
+        count_sds = jax.ShapeDtypeStruct((), jnp.int32, sharding=rep)
+        state_sds = type(state_shapes)(
+            params=params_sds,
+            opt_state={"mu": mu_sds, "nu": nu_sds, "count": count_sds},
+            fl=fl_sds,
+        )
+        batch_sds = batch_specs(cfg, shape, mesh, layout)
+        step = make_fl_train_step(model, optimizer, scheduler, env, N_CLIENTS,
+                                  microbatches=microbatch)
+        tokens = shape.global_batch * shape.seq_len
+        mflops = model_flops_train(cfg.active_param_count(), tokens)
+        return step, (state_sds, batch_sds, key_sds), mflops
+
+    if shape.mode == "prefill":
+        params_tmpl, specs = shape_params_with_specs(model, key_sds)
+        pshard = param_shardings(params_tmpl, specs, mesh, rules)
+        params_sds = jax.tree_util.tree_map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params_tmpl, pshard)
+        batch_sds = batch_specs(cfg, shape, mesh, layout)
+        step = make_prefill_step(model)
+        tokens = shape.global_batch * (
+            shape.seq_len + (cfg.frontend_tokens if cfg.arch_type == "vlm" else 0))
+        mflops = model_flops_forward(cfg.active_param_count(), tokens)
+        return step, (params_sds, batch_sds), mflops
+
+    # decode
+    window = serve_window(cfg, shape_name)
+    params_tmpl, specs = shape_params_with_specs(model, key_sds)
+    pshard = param_shardings(params_tmpl, specs, mesh, rules)
+    params_sds = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        params_tmpl, pshard)
+    cache_sds = cache_specs(model, shape, mesh)
+    tok_sds = decode_token_specs(cfg, shape, mesh)
+    step = make_serve_step(model, window=window)
+    mflops = model_flops_forward(cfg.active_param_count(), shape.global_batch)
+    return step, (params_sds, cache_sds, tok_sds), mflops
+
+
+def shape_params_with_specs(model, key_sds):
+    """(param ShapeDtypeStructs, logical specs) — metadata only, no allocation."""
+    return model.param_specs()
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Optional[str],
+            remat: str = "full", layout: str = "tp", ce_chunk: int = 0,
+            seq_shard: bool = False, microbatch: int = 1) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    ok, reason = supported(cfg, shape_name)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "remat": remat,
+        "layout": layout, "ce_chunk": ce_chunk, "seq_shard": seq_shard,
+        "microbatch": microbatch,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({reason})")
+        return _write(rec, out_dir)
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            step, arg_specs, mflops = build_step_and_specs(
+                arch, shape_name, mesh, remat, layout, ce_chunk, seq_shard,
+                microbatch)
+            lowered = jax.jit(step).lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        ops = count_ops(hlo)
+        n_chips = 512 if multi_pod else 256
+        # XLA's cost_analysis counts while/scan bodies ONCE (verified in
+        # EXPERIMENTS.md): use the trip-count-aware jaxpr walker for the
+        # roofline, keep the raw XLA numbers for reference.
+        logical = step_cost(step, *arg_specs)
+        roof = Roofline(
+            flops=logical.flops / n_chips,
+            hbm_bytes=logical.bytes_fused / n_chips,
+            coll_bytes=float(coll.get("total", 0.0)),
+            model_flops=mflops,
+            chips=n_chips,
+            attn_score_bytes=logical.attn_score_bytes / n_chips,
+        )
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            cost_xla={k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and not k.startswith(("utilization", "bytes accessed"))
+                      or k in ("flops", "bytes accessed", "transcendentals")},
+            cost_logical=logical.to_dict(),
+            collectives=coll,
+            hlo_ops=ops,
+            roofline=roof.to_dict(),
+        )
+        print(
+            f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+            f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s) "
+            f"bottleneck={roof.bottleneck} "
+            f"t=({roof.t_compute:.3e}, {roof.t_memory:.3e}, {roof.t_collective:.3e})s"
+        )
+        print(f"  memory_analysis: {mem}")
+    except Exception as e:  # noqa: BLE001 — a failure here IS the finding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {type(e).__name__}: {e}")
+    return _write(rec, out_dir)
+
+
+def _write(rec: Dict[str, Any], out_dir: Optional[str]) -> Dict[str, Any]:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        variant = ""
+        if rec.get("layout", "tp") != "tp":
+            variant += f"__{rec['layout']}"
+        if rec.get("ce_chunk"):
+            variant += f"__ce{rec['ce_chunk']}"
+        if rec.get("seq_shard"):
+            variant += "__sp"
+        if rec.get("microbatch", 1) > 1:
+            variant += f"__mb{rec['microbatch']}"
+        name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{variant}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["full", "none", "dots"])
+    ap.add_argument("--layout", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, args.out, args.remat,
+                              args.layout, args.ce_chunk, args.seq_shard,
+                              args.microbatch)
+                failures += rec["status"] == "error"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

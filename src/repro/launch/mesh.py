@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: 16 x 16 = 256 chips, axes (data, model).
+Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod axis
+carries pure data parallelism (cross-pod DCN all-reduce), matching how the
+paper's FL clients map onto silos (DESIGN.md Sec. 4).
+
+Defined as functions — importing this module never touches jax device
+state (device count is locked at first jax initialization, so the dry-run
+sets XLA_FLAGS before any import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axis_names(mesh) -> tuple:
+    """Axes that carry batch/data parallelism for this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

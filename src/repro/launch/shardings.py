@@ -1,0 +1,113 @@
+"""Logical-axis -> mesh-axis resolution.
+
+Models annotate every parameter with logical axes ("embed", "heads",
+"vocab", "expert", "layers"); this module maps them onto the physical
+mesh:
+
+    heads / vocab / expert -> "model"   (tensor parallelism)
+    embed                  -> "data"    (FSDP / ZeRO-3: weights gathered
+                                         per-layer inside the scan body)
+    layers / None          -> replicated
+
+Activations: batch -> all data axes (("pod","data") on the multi-pod
+mesh); decode KV-cache sequence -> "model" (sequence-sharded distributed
+flash-decode — the softmax reductions become all-reduces under GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    "heads": "model",
+    "vocab": "model",
+    "expert": "model",
+    "embed": "data",
+    "layers": None,
+}
+
+# Pure-FSDP layout: weights fully sharded over BOTH axes on the embed dim,
+# no tensor parallelism.  The right sizing for <10B models, where TP=16
+# activation all-reduces dominate the roofline (§Perf: recurrentgemma-2b
+# 236 GB -> ~30 GB collective traffic per step).
+FSDP_RULES: Dict[str, object] = {
+    "heads": None,
+    "vocab": None,
+    "expert": None,
+    "embed": ("data", "model"),
+    "layers": None,
+}
+
+LAYOUTS: Dict[str, Dict[str, object]] = {"tp": DEFAULT_RULES, "fsdp": FSDP_RULES}
+
+
+def _axes_tuple(axis) -> tuple:
+    if axis is None:
+        return ()
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    axes = _axes_tuple(axis)
+    if not axes or any(a not in mesh.axis_names for a in axes):
+        return False
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    return dim % total == 0
+
+
+def logical_to_pspec(
+    shape: Tuple[int, ...],
+    logical: Tuple[Optional[str], ...],
+    mesh: Mesh,
+    rules: Optional[Dict[str, object]] = None,
+) -> P:
+    """Resolve one param's logical spec, dropping any axis that doesn't divide."""
+    rules = rules or DEFAULT_RULES
+    out = []
+    used = set()
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name else None
+        axes = _axes_tuple(axis)
+        if used.intersection(axes) or not _divisible(dim, mesh, axis):
+            out.append(None)
+        else:
+            out.append(axis)
+            used.update(axes)
+    return P(*out)
+
+
+def param_shardings(
+    params: Dict[str, Any],
+    specs: Dict[str, Tuple[Optional[str], ...]],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Optional[str]]] = None,
+) -> Dict[str, NamedSharding]:
+    return {
+        k: NamedSharding(mesh, logical_to_pspec(np.shape(v), specs[k], mesh, rules))
+        for k, v in params.items()
+    }
+
+
+def like_tree(tree: Any, shardings_flat: Dict[str, NamedSharding]):
+    """Map a flat {path: sharding} onto a flat {path: array/SDS} dict."""
+    return {k: shardings_flat[k] for k in tree}
+
+
+def batch_pspec(mesh: Mesh, layout: str = "tp") -> P:
+    """Batch-dim spec covering every data-parallel axis of the mesh.
+
+    'tp': (pod, data).  'fsdp': (data, model) — no tensor axis exists, so
+    the batch spreads across the whole pod (pure data parallelism)."""
+    names = ("pod", "data") if layout == "tp" else ("data", "model")
+    axes = tuple(a for a in names if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,12 @@
+"""Composable model zoo: every assigned architecture builds from these parts.
+
+layers.py       norms, RoPE, MLPs, embeddings, the ParamBuilder registry
+attention.py    GQA (+bias/qk-norm/windowed) and MLA, prefill + cached decode
+moe.py          top-k routed experts (sort-based static-capacity dispatch)
+ssm.py          Mamba-2 SSD (chunked scan + O(1) decode state)
+rglru.py        RG-LRU recurrent block (RecurrentGemma)
+transformer.py  block composition, scan-over-layers stacking
+model.py        build_model(config) -> Model(init/apply/loss/decode)
+kvcache.py      full, ring (sliding-window) and MLA-latent caches
+"""
+from repro.models.model import Model, build_model

@@ -1,0 +1,66 @@
+"""KV caches: full, ring (sliding-window) and MLA-latent.
+
+A cache is a flat dict of arrays plus a scalar ``pos``.  The *ring* layout
+caps memory at ``window`` entries — keys are stored post-RoPE (absolute
+positions), so ring overwrite needs no re-rotation; masking is by age.
+This is what makes ``long_500k`` serveable for the dense/MoE/VLM archs:
+cache bytes are O(window), not O(seq).
+
+MLA caches store the compressed latent + the shared rotary key instead of
+per-head K/V — the paper-exact deepseek-v2 layout (kv_lora + rope dims per
+token instead of 2 * H_kv * head_dim).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+
+def cache_len(seq_len: int, window: int) -> int:
+    """Physical cache length: the ring window if set, else the full context."""
+    return min(seq_len, window) if window > 0 else seq_len
+
+
+def init_gqa_cache(
+    batch: int, n_kv_heads: int, seq_len: int, head_dim: int,
+    window: int = 0, n_layers: int = 0, dtype=jnp.bfloat16,
+) -> Dict[str, jnp.ndarray]:
+    s = cache_len(seq_len, window)
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "k": jnp.zeros(lead + (batch, n_kv_heads, s, head_dim), dtype),
+        "v": jnp.zeros(lead + (batch, n_kv_heads, s, head_dim), dtype),
+    }
+
+
+def init_mla_cache(
+    batch: int, seq_len: int, kv_lora: int, rope_dim: int,
+    window: int = 0, n_layers: int = 0, dtype=jnp.bfloat16,
+) -> Dict[str, jnp.ndarray]:
+    s = cache_len(seq_len, window)
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "latent": jnp.zeros(lead + (batch, s, kv_lora), dtype),
+        "k_rope": jnp.zeros(lead + (batch, s, rope_dim), dtype),
+    }
+
+
+def ring_slot(pos: jnp.ndarray, physical_len: int) -> jnp.ndarray:
+    """Physical write slot for logical position ``pos``."""
+    return pos % physical_len
+
+
+def valid_mask(pos: jnp.ndarray, physical_len: int, window: int) -> jnp.ndarray:
+    """(physical_len,) bool — which slots hold tokens visible at step ``pos``.
+
+    For a full cache (window == 0) slots [0, pos] are valid.  For a ring,
+    every slot written in the last ``window`` steps is valid.
+    """
+    slots = jnp.arange(physical_len)
+    if window == 0:
+        return slots <= pos
+    # slot s currently holds logical index: the largest l <= pos with l % W == s
+    written = slots <= pos  # before first wrap some slots are empty
+    age = (pos - slots) % physical_len
+    return written & (age < physical_len)

@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+    r_t = sigmoid(W_a x_t)                     recurrence gate
+    i_t = sigmoid(W_i x_t)                     input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)     gated decay (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The block wraps the LRU with a temporal conv and a GeLU gate branch
+(the Griffin recurrent block).  The linear recurrence is evaluated with
+``lax.associative_scan`` over the sequence (log-depth, partitionable);
+decode is a single O(1) state update — with the 1:2 local-attention
+pattern this is what makes recurrentgemma ``long_500k``-native.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, rms_norm
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+def lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def add_rglru_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, stacked: int = 0):
+    d = cfg.d_model
+    w = lru_width(cfg)
+    cw = cfg.conv_width
+    g = cfg.lru_gate_blocks
+    lead = (stacked,) if stacked else ()
+    ls = ("layers",) if stacked else ()
+    pb.add(f"{prefix}/w_x", lead + (d, w), ls + ("embed", "heads"))
+    pb.add(f"{prefix}/w_gate", lead + (d, w), ls + ("embed", "heads"))
+    pb.add(f"{prefix}/conv", lead + (cw, w), ls + (None, "heads"), scale=0.5)
+    if g > 0:
+        # block-diagonal gates (Griffin Sec. 2.4): (G, W/G, W/G) with the
+        # block dim on the tensor axis — gate contractions stay shard-local
+        wb = w // g
+        pb.add(f"{prefix}/w_a", lead + (g, wb, wb), ls + ("heads", None, None),
+               scale=0.02)
+        pb.add(f"{prefix}/w_i", lead + (g, wb, wb), ls + ("heads", None, None),
+               scale=0.02)
+    else:
+        pb.add(f"{prefix}/w_a", lead + (w, w), ls + ("heads", None), scale=0.02)
+        pb.add(f"{prefix}/w_i", lead + (w, w), ls + ("heads", None), scale=0.02)
+    pb.add(f"{prefix}/lam", lead + (w,), ls + (None,), init="ones")
+    pb.add(f"{prefix}/w_out", lead + (w, d), ls + ("heads", "embed"))
+
+
+def _gate_proj(xf, w):
+    """Dense (W,V) or block-diagonal (G, W/G, W/G) gate projection."""
+    if w.ndim == xf.ndim:  # (G, Wb, Wb) vs (B,S,W): block-diagonal
+        b, s, _ = xf.shape
+        g, wb, _ = w.shape
+        xg = xf.reshape(b, s, g, wb)
+        return jnp.einsum("bsgw,gwv->bsgv", xg, w).reshape(b, s, g * wb)
+    return jnp.einsum("bsw,wv->bsv", xf, w)
+
+
+def _gates(p, prefix, x):
+    """x (B,S,W) -> (a, gated_input) both (B,S,W) f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(_gate_proj(xf, p[f"{prefix}/w_a"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(_gate_proj(xf, p[f"{prefix}/w_i"].astype(jnp.float32)))
+    log_a = -_C * jax.nn.softplus(p[f"{prefix}/lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_forward(
+    p: Dict[str, jnp.ndarray], prefix: str, u: jnp.ndarray, cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Full-sequence recurrent block.  u (B,S,d) -> (B,S,d)."""
+    x = jnp.einsum("bsd,dw->bsw", u, p[f"{prefix}/w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", u, p[f"{prefix}/w_gate"])
+    x, _ = _causal_conv(x, p[f"{prefix}/conv"])
+    a, b = _gates(p, prefix, x)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan over the seq axis
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, p[f"{prefix}/w_out"])
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig, n_layers: int = 0, dtype=jnp.bfloat16):
+    w = lru_width(cfg)
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "h": jnp.zeros(lead + (batch, w), jnp.float32),
+        "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode(
+    p: Dict[str, jnp.ndarray], prefix: str, u: jnp.ndarray, cfg: ModelConfig,
+    cache: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token step.  u (B,1,d)."""
+    x = jnp.einsum("bsd,dw->bsw", u, p[f"{prefix}/w_x"])
+    gate = jnp.einsum("bsd,dw->bsw", u, p[f"{prefix}/w_gate"])
+    x, tail = _causal_conv(x, p[f"{prefix}/conv"], cache["conv"])
+    a, b = _gates(p, prefix, x)
+    h = a[:, 0] * cache["h"] + b[:, 0]                      # (B,W)
+    y = h[:, None].astype(u.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(u.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p[f"{prefix}/w_out"])
+    return out, {"h": h, "conv": tail}

@@ -1,0 +1,192 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Selective state space with scalar-per-head decay:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * (x_t outer B_t)
+    y_t = C_t . h_t + D * x_t,       gated:  out = norm(y * silu(z)) W_out
+
+Training uses the chunked SSD algorithm: the sequence is cut into chunks
+of length L; within a chunk the quadratic "attention-like" form runs on
+the MXU, across chunks a `lax.scan` carries the (B, H, P, N) state.  The
+chunk body is `jax.checkpoint`-ed so the (L x L) decay tensors never
+persist to the backward pass — the pure-JAX analogue of the fused Triton
+kernel in the paper.
+
+Decode carries (ssm state, conv tail) and is O(1) in sequence length —
+this is why mamba2 serves ``long_500k`` natively.
+
+Projection matrices are kept per-stream (z / x / B / C / dt) so each
+output dim shards cleanly on the ``heads`` (tensor) axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, rms_norm
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def add_ssm_params(pb: ParamBuilder, prefix: str, cfg: ModelConfig, stacked: int = 0):
+    d, n, h = cfg.d_model, cfg.ssm_state, cfg.ssm_heads
+    di = d_inner(cfg)
+    cw = cfg.conv_width
+    lead = (stacked,) if stacked else ()
+    ls = ("layers",) if stacked else ()
+    pb.add(f"{prefix}/w_z", lead + (d, di), ls + ("embed", "heads"))
+    pb.add(f"{prefix}/w_x", lead + (d, di), ls + ("embed", "heads"))
+    pb.add(f"{prefix}/w_b", lead + (d, n), ls + ("embed", None))
+    pb.add(f"{prefix}/w_c", lead + (d, n), ls + ("embed", None))
+    pb.add(f"{prefix}/w_dt", lead + (d, h), ls + ("embed", "heads"))
+    pb.add(f"{prefix}/dt_bias", lead + (h,), ls + ("heads",), init="zeros")
+    pb.add(f"{prefix}/conv_x", lead + (cw, di), ls + (None, "heads"), scale=0.5)
+    pb.add(f"{prefix}/conv_b", lead + (cw, n), ls + (None, None), scale=0.5)
+    pb.add(f"{prefix}/conv_c", lead + (cw, n), ls + (None, None), scale=0.5)
+    pb.add(f"{prefix}/a_log", lead + (h,), ls + ("heads",), init="zeros")
+    pb.add(f"{prefix}/d_skip", lead + (h,), ls + ("heads",), init="ones")
+    pb.add(f"{prefix}/norm", lead + (di,), ls + (None,), init="ones")
+    pb.add(f"{prefix}/w_out", lead + (di, d), ls + ("heads", "embed"))
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: jnp.ndarray = None):
+    """Depthwise causal conv.  x (B,S,C), w (K,C).  tail: (B,K-1,C) carry-in."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else tail
+    return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_tail
+
+
+def _ssd_chunk(state, xs, a_heads):
+    """One SSD chunk.  state (B,H,P,N); xs = (x (B,L,H,P), b (B,L,N), c (B,L,N),
+    dt (B,L,H)); a_heads (H,) negative decay rates.  Returns (state', y)."""
+    x, b, c, dt = xs
+    a = dt * a_heads                                        # (B,L,H)  (<= 0)
+    cum = jnp.cumsum(a, axis=1)                             # inclusive
+    # incoming-state contribution: y_i += (C_i . h_0) * exp(cum_i)
+    y_in = jnp.einsum("bin,bhpn->bihp", c, state) * jnp.exp(cum)[..., None]
+    # intra-chunk (attention-like) term
+    scores = jnp.einsum("bin,bjn->bij", c, b)               # (B,L,L)
+    decay = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,i,j,H)
+    li = jnp.arange(x.shape[1])
+    causal = (li[:, None] >= li[None, :])[None, :, :, None]
+    w_ij = jnp.where(causal, scores[..., None] * decay, 0.0)  # (B,i,j,H)
+    y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", w_ij, dt, x)
+    # state update
+    last = cum[:, -1][:, None]                              # (B,1,H)
+    carry_w = jnp.exp(last - cum) * dt                      # (B,L,H)
+    state_new = (
+        jnp.exp(cum[:, -1])[..., None, None] * state
+        + jnp.einsum("bjh,bjhp,bjn->bhpn", carry_w, x, b)
+    )
+    return state_new, y_in + y_intra
+
+
+def ssm_forward(
+    p: Dict[str, jnp.ndarray], prefix: str, u: jnp.ndarray, cfg: ModelConfig,
+) -> jnp.ndarray:
+    """Full-sequence SSD.  u: (B, S, d) -> (B, S, d)."""
+    bsz, s, d = u.shape
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    di = d_inner(cfg)
+    pdim = di // h
+    z = jnp.einsum("bsd,de->bse", u, p[f"{prefix}/w_z"])
+    x = jnp.einsum("bsd,de->bse", u, p[f"{prefix}/w_x"])
+    b = jnp.einsum("bsd,dn->bsn", u, p[f"{prefix}/w_b"])
+    c = jnp.einsum("bsd,dn->bsn", u, p[f"{prefix}/w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p[f"{prefix}/w_dt"]).astype(jnp.float32)
+        + p[f"{prefix}/dt_bias"].astype(jnp.float32)
+    )
+    x, _ = _causal_conv(x, p[f"{prefix}/conv_x"])
+    b, _ = _causal_conv(b, p[f"{prefix}/conv_b"])
+    c, _ = _causal_conv(c, p[f"{prefix}/conv_c"])
+
+    a_heads = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+
+    l = min(cfg.ssm_chunk, s)
+    pad = (-s) % l
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // l
+    xh = x.reshape(bsz, nc, l, h, pdim).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    bh = b.reshape(bsz, nc, l, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    ch = c.reshape(bsz, nc, l, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dth = dt.reshape(bsz, nc, l, h).transpose(1, 0, 2, 3)
+
+    state0 = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    body = jax.checkpoint(functools.partial(_ssd_chunk, a_heads=a_heads))
+    _, ys = jax.lax.scan(lambda st, xs: body(st, xs), state0, (xh, bh, ch, dth))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s + pad, h, pdim)[:, :s]
+    y = y + xh.transpose(1, 0, 2, 3, 4).reshape(bsz, s + pad, h, pdim)[:, :s] * (
+        p[f"{prefix}/d_skip"].astype(jnp.float32)[:, None]
+    )
+    y = y.reshape(bsz, s, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                 p[f"{prefix}/norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p[f"{prefix}/w_out"])
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig, n_layers: int = 0, dtype=jnp.float32):
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    di = d_inner(cfg)
+    cw = cfg.conv_width
+    lead = (n_layers,) if n_layers else ()
+    return {
+        "ssm_state": jnp.zeros(lead + (batch, h, di // h, n), jnp.float32),
+        "conv_x": jnp.zeros(lead + (batch, cw - 1, di), dtype),
+        "conv_b": jnp.zeros(lead + (batch, cw - 1, n), dtype),
+        "conv_c": jnp.zeros(lead + (batch, cw - 1, n), dtype),
+    }
+
+
+def ssm_decode(
+    p: Dict[str, jnp.ndarray], prefix: str, u: jnp.ndarray, cfg: ModelConfig,
+    cache: Dict[str, jnp.ndarray],
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token SSD step.  u (B,1,d); cache from init_ssm_cache (unstacked)."""
+    bsz = u.shape[0]
+    h, n = cfg.ssm_heads, cfg.ssm_state
+    di = d_inner(cfg)
+    pdim = di // h
+    z = jnp.einsum("bsd,de->bse", u, p[f"{prefix}/w_z"])
+    x = jnp.einsum("bsd,de->bse", u, p[f"{prefix}/w_x"])
+    b = jnp.einsum("bsd,dn->bsn", u, p[f"{prefix}/w_b"])
+    c = jnp.einsum("bsd,dn->bsn", u, p[f"{prefix}/w_c"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", u, p[f"{prefix}/w_dt"]).astype(jnp.float32)
+        + p[f"{prefix}/dt_bias"].astype(jnp.float32)
+    )[:, 0]                                                  # (B,H)
+    x, tail_x = _causal_conv(x, p[f"{prefix}/conv_x"], cache["conv_x"])
+    b, tail_b = _causal_conv(b, p[f"{prefix}/conv_b"], cache["conv_b"])
+    c, tail_c = _causal_conv(c, p[f"{prefix}/conv_c"], cache["conv_c"])
+
+    a_heads = -jnp.exp(p[f"{prefix}/a_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, h, pdim).astype(jnp.float32)
+    bv = b[:, 0].astype(jnp.float32)
+    cv = c[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a_heads)                            # (B,H)
+    state = cache["ssm_state"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, bv
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cv, state) + xh * p[f"{prefix}/d_skip"].astype(
+        jnp.float32
+    )[:, None]
+    y = y.reshape(bsz, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                 p[f"{prefix}/norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p[f"{prefix}/w_out"])
+    new_cache = {"ssm_state": state, "conv_x": tail_x, "conv_b": tail_b, "conv_c": tail_c}
+    return out, new_cache

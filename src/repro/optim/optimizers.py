@@ -1,0 +1,94 @@
+"""Pure-JAX optimizers with optax-style (init, update) pure functions.
+
+States are pytrees mirroring the parameter tree, so the launcher can ZeRO-
+shard them (moments take the same logical PartitionSpec as their parameter,
+letting GSPMD distribute optimizer memory over both mesh axes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params):
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(lambda g: -lr * g.astype(jnp.float32), grads)
+            return upd, state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(
+    lr: float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+) -> Optimizer:
+    """AdamW with global-norm clipping; moments in f32 regardless of param dtype."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads)))
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        cnt = state["count"] + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state["mu"], grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * g * g, state["nu"], grads)
+        bc1 = 1 - b1 ** cnt.astype(jnp.float32)
+        bc2 = 1 - b2 ** cnt.astype(jnp.float32)
+
+        def step(m, v, p):
+            upd = -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd = upd - lr * weight_decay * p.astype(jnp.float32)
+            return upd
+
+        upd = jax.tree_util.tree_map(step, mu, nu, params)
+        return upd, {"mu": mu, "nu": nu, "count": cnt}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype), params, updates)

@@ -1,0 +1,8 @@
+from repro.utils.tree import (
+    tree_size,
+    tree_bytes,
+    tree_flatten_concat,
+    tree_unflatten_concat,
+    tree_zeros_like,
+    tree_cast,
+)

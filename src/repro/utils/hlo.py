@@ -1,0 +1,87 @@
+"""HLO text analysis: collective-traffic accounting for the roofline.
+
+``compiled.cost_analysis()`` exposes flops/bytes but not collective bytes,
+so we parse the (SPMD-partitioned, per-device) HLO text and sum the result
+shapes of every communication op.  Bytes-moved multipliers per op type:
+
+    all-gather          1x result        (each device receives the gathered
+                                          result once over ICI)
+    all-reduce          2x operand       (ring = reduce-scatter + all-gather)
+    reduce-scatter      1x operand
+    all-to-all          1x operand
+    collective-permute  1x operand
+
+These are the standard ring-algorithm approximations; the roofline only
+needs the right order of magnitude and relative weight between ops.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]")
+
+_COLLECTIVES = {
+    "all-gather": ("result", 1.0),
+    "all-reduce": ("result", 2.0),
+    "reduce-scatter": ("result", 1.0),
+    "all-to-all": ("result", 1.0),
+    "collective-permute": ("result", 1.0),
+}
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved per collective type (+ 'total').
+
+    ``-start``/``-done`` async pairs are counted once (the ``-done`` op has
+    no shape payload of its own in the result tuple accounting — we skip
+    ops whose name ends in ``-done``).
+    """
+    out: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        _, mult = _COLLECTIVES[op]
+        out[op] += mult * _shape_bytes(result_type)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "while", "dot", "convolution")) -> Dict[str, int]:
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        for n in names:
+            if f" {n}(" in s or s.startswith(f"{n}("):
+                counts[n] += 1
+    return dict(counts)

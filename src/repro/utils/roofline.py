@@ -1,0 +1,105 @@
+"""Three-term roofline model for TPU v5e (the target hardware).
+
+    compute    = HLO_FLOPs / peak_FLOPs            [s]
+    memory     = HLO_bytes / HBM_bandwidth         [s]
+    collective = collective_bytes / ICI_link_bw    [s]
+
+All inputs are *per-device* quantities (the SPMD-partitioned HLO module is
+per-device, as is its cost_analysis), so no further division by chip count
+is needed — the spec's ``X / (chips * bw)`` with per-cluster totals is the
+same number.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, TPU v5e
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link (~, per the assignment)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO flops
+    hbm_bytes: float           # per-device HLO bytes accessed
+    coll_bytes: float          # per-device collective bytes
+    model_flops: float = 0.0   # 6*N*D (or 6*N_active*D) across the cluster
+    chips: int = 256
+    attn_score_bytes: float = 0.0  # per-device score/probs traffic — the part
+                                   # the Pallas flash kernel keeps in VMEM
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_LINK_BW
+
+    @property
+    def t_memory_flash(self) -> float:
+        """Memory term when attention runs through the Pallas flash kernel
+        (score/probs tensors stay in VMEM and never hit HBM)."""
+        return max(self.hbm_bytes - self.attn_score_bytes, 0.0) / HBM_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """Max of the three terms (perfect-overlap assumption)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / (per-device HLO flops * chips): remat/redundancy waste."""
+        if not self.model_flops:
+            return None
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else None
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilization at the roofline bound."""
+        if not self.model_flops:
+            return None
+        t = self.step_time_lower_bound
+        return self.model_flops / (self.chips * PEAK_FLOPS_BF16 * t) if t else None
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_memory_flash_s": self.t_memory_flash,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_lower_bound_s": self.step_time_lower_bound,
+            "useful_flop_ratio": self.useful_flop_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_train(n_active_params: float, tokens: int) -> float:
+    """6 * N * D for one training step."""
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_forward(n_active_params: float, tokens: int) -> float:
+    """2 * N * D for forward-only (prefill / decode)."""
+    return 2.0 * n_active_params * tokens

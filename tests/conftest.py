@@ -1,0 +1,10 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests
+and kernel tests must see the real (single-CPU) device; only
+repro.launch.dryrun forces 512 placeholder devices, in its own process."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,136 @@
+"""HLO collective parser, jaxpr cost walker, sharding rules, roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo import collective_bytes, count_ops
+from repro.utils.jaxpr_cost import step_cost
+from repro.utils.roofline import Roofline
+
+
+# ---------------------------------------------------------------------------
+# HLO parser
+# ---------------------------------------------------------------------------
+
+SAMPLE_HLO = """
+ENTRY %main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(f32[16,128]{1,0} %p0), dimensions={0}
+  %ar = f32[64,128]{1,0} all-reduce(f32[64,128]{1,0} %ag), to_apply=%add
+  %rs = bf16[8,128]{1,0} reduce-scatter(bf16[64,128]{1,0} %x), dimensions={0}
+  %cp = f32[4]{0} collective-permute(f32[4]{0} %y)
+  ROOT %t = tuple()
+}
+"""
+
+
+def test_collective_bytes_parses_types_and_multipliers():
+    out = collective_bytes(SAMPLE_HLO)
+    assert out["all-gather"] == 64 * 128 * 4
+    assert out["all-reduce"] == 2 * 64 * 128 * 4     # ring: RS + AG
+    assert out["reduce-scatter"] == 8 * 128 * 2
+    assert out["collective-permute"] == 4 * 4
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_collective_bytes_counts_async_pairs_once():
+    hlo = """
+  %s = f32[32]{0} all-gather-start(f32[8]{0} %p)
+  %d = f32[32]{0} all-gather-done(f32[32]{0} %s)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 32 * 4
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_counts_scan_trip_counts():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, ()
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+    cost = step_cost(f, x, w)
+    expected = 12 * 2 * 64 ** 3
+    assert abs(cost.flops - expected) / expected < 0.05
+
+
+def test_jaxpr_cost_counts_remat_recompute():
+    def f(x, w):
+        def blk(c, wi):
+            return jax.checkpoint(lambda a, b: jnp.tanh(a @ b))(c, wi), ()
+        y, _ = jax.lax.scan(blk, x, w)
+        return jnp.sum(y)
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+    fwd = step_cost(f, x, w)
+    bwd = step_cost(jax.grad(f, argnums=1), x, w)
+    # backward includes fwd recompute + 2 matmul transposes: >= 2.5x forward dots
+    assert bwd.flops > 2.5 * fwd.flops
+
+
+def test_jaxpr_cost_dot_general_exact():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    cost = step_cost(f, a, b)
+    assert cost.flops == 2 * 4 * 32 * 16 * 8
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def test_logical_to_pspec_divisibility():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.shardings import logical_to_pspec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    assert logical_to_pspec((1024, 4096), ("embed", "heads"), m) == P("data", "model")
+    # vocab 152064 divides 16; head dim 100 does not -> dropped
+    assert logical_to_pspec((100, 152064), ("heads", "vocab"), m) == P(None, "model")
+    # duplicate axis: second use dropped
+    assert logical_to_pspec((64, 64), ("heads", "vocab"), m) == P("model", None)
+
+
+def test_cache_pspec_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.specs import cache_pspec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    # (L, B, H, S, hd): batch 128 -> data, seq 32768 -> model
+    assert cache_pspec("k", (64, 128, 8, 32768, 128), m) == P(None, "data", None, "model", None)
+    # batch 1 does not divide -> replicated batch, seq still sharded
+    assert cache_pspec("latent", (60, 1, 4096, 512), m) == P(None, None, "model", None)
+    assert cache_pspec("pos", (), m) == P()
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+def test_roofline_bottleneck_and_bounds():
+    r = Roofline(flops=197e12, hbm_bytes=819e9 / 2, coll_bytes=0.0,
+                 model_flops=197e12 * 256, chips=256)
+    assert r.bottleneck == "compute"
+    assert abs(r.t_compute - 1.0) < 1e-6
+    assert abs(r.useful_flop_ratio - 1.0) < 1e-6
+    assert abs(r.mfu_bound - 1.0) < 1e-6
+    r2 = Roofline(flops=1e12, hbm_bytes=819e9, coll_bytes=100e9, chips=256)
+    assert r2.bottleneck == "collective"

@@ -1,0 +1,74 @@
+"""Channel-environment behaviour (Sec. II-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.channels import (
+    make_adversarial,
+    make_piecewise,
+    make_stationary,
+    random_adversarial_env,
+    random_piecewise_env,
+)
+
+
+def test_stationary_sample_statistics():
+    mus = jnp.array([0.1, 0.5, 0.9])
+    env = make_stationary(mus)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4000)
+    states = jax.vmap(lambda k: env.sample(jnp.zeros((), jnp.int32), k))(keys)
+    emp = states.mean(0)
+    np.testing.assert_allclose(emp, mus, atol=0.03)
+
+
+def test_piecewise_segment_switching():
+    means = jnp.array([[0.9, 0.1], [0.1, 0.9], [0.5, 0.5]])
+    env = make_piecewise(means, jnp.array([100, 200]))
+    np.testing.assert_allclose(env.means_at(jnp.array(0)), means[0])
+    np.testing.assert_allclose(env.means_at(jnp.array(99)), means[0])
+    np.testing.assert_allclose(env.means_at(jnp.array(100)), means[1])
+    np.testing.assert_allclose(env.means_at(jnp.array(199)), means[1])
+    np.testing.assert_allclose(env.means_at(jnp.array(200)), means[2])
+    np.testing.assert_allclose(env.means_at(jnp.array(5000)), means[2])
+
+
+def test_adversarial_is_deterministic():
+    table = (np.arange(50)[:, None] % 2 == np.arange(4)[None, :] % 2).astype(np.uint8)
+    env = make_adversarial(table)
+    k = jax.random.PRNGKey(1)
+    for t in [0, 3, 49]:
+        s1 = env.sample(jnp.array(t), k)
+        s2 = env.sample(jnp.array(t), jax.random.PRNGKey(99))
+        np.testing.assert_array_equal(s1, s2)          # key-independent
+        np.testing.assert_array_equal(s1, table[t])
+
+
+def test_random_piecewise_env_breaks_sorted_and_bounded():
+    env = random_piecewise_env(jax.random.PRNGKey(0), 6, 1000, 5)
+    brk = np.asarray(env.breaks)
+    assert (np.diff(brk) >= 0).all()
+    assert brk.min() >= 1 and brk.max() <= 999
+    assert env.means.shape == (6, 6)
+
+
+def test_random_adversarial_env_flip_rate():
+    env = random_adversarial_env(jax.random.PRNGKey(0), 4, 5000, flip_prob=0.01)
+    tbl = np.asarray(env.table, dtype=np.int32)
+    flips = np.abs(np.diff(tbl, axis=0)).mean()
+    assert 0.004 < flips < 0.02         # ~flip_prob per channel per round
+
+
+def test_env_is_jittable_through_scan():
+    env = random_piecewise_env(jax.random.PRNGKey(0), 4, 100, 2)
+
+    @jax.jit
+    def total_good(key):
+        def step(c, t):
+            k = jax.random.fold_in(key, t)
+            return c + env.sample(t, k).sum(), ()
+        out, _ = jax.lax.scan(step, 0.0, jnp.arange(100))
+        return out
+
+    v = total_good(jax.random.PRNGKey(1))
+    assert 0 < float(v) < 400

@@ -1,0 +1,146 @@
+"""Async-FL runtime integration (Sec. II-A Steps 1-4 + Sec. V)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB, RandomScheduler
+from repro.core.channels import make_stationary, random_piecewise_env
+from repro.data import FederatedLoader, make_federated_classification
+from repro.fl import AsyncFLConfig, AsyncFLTrainer, local_sgd
+from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
+
+KEY = jax.random.PRNGKey(0)
+M, N = 6, 9
+
+
+def _mlp(key, dim=32, h=64, c=10):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (dim, h)) * 0.2, "b1": jnp.zeros(h),
+        "w2": jax.random.normal(k2, (h, c)) * 0.2, "b2": jnp.zeros(c),
+    }
+
+
+def _logits(p, x):
+    return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def _loss(p, x, y):
+    lg = jax.nn.log_softmax(_logits(p, x))
+    return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cx, cy, tx, ty, px, py = make_federated_classification(
+        M, samples_per_client=128, dim=32, alpha=0.3)
+    loader = FederatedLoader(cx, cy, batch_size=16, local_epochs=2)
+    params = _mlp(KEY, dim=32)
+
+    def proxy(flat):
+        return _loss(tree_unflatten_concat(flat, params),
+                     jnp.asarray(px), jnp.asarray(py))
+
+    return loader, params, (tx, ty), proxy
+
+
+def _make_trainer(setup, sched=None, **cfg_kw):
+    loader, params, _, proxy = setup
+    env = make_stationary(jnp.linspace(0.9, 0.2, N))
+    cfg = AsyncFLConfig(n_clients=M, n_channels=N, local_epochs=2,
+                        client_lr=0.1, server_lr=0.1, **cfg_kw)
+    sched = sched or GLRCUCB(N, M, history=64)
+    return AsyncFLTrainer(cfg, sched, env, _loss, proxy), params
+
+
+def test_local_sgd_returns_cumulative_update(setup):
+    loader, params, _, _ = setup
+    bx, by = loader.next_round()
+    g, loss = local_sgd(_loss, params,
+                        jnp.asarray(bx[0]), jnp.asarray(by[0]), lr=0.1)
+    assert jnp.isfinite(loss)
+    # G~ = (w0 - wE)/eta: applying -eta*G~ must reproduce the local final params
+    w_final = jax.tree_util.tree_map(lambda w, gi: w - 0.1 * gi, params, g)
+    flat = tree_flatten_concat(w_final)
+    assert bool(jnp.isfinite(flat).all())
+    assert float(jnp.abs(tree_flatten_concat(g)).max()) > 0
+
+
+def test_round_bookkeeping_invariants(setup):
+    loader = setup[0]
+    trainer, params = _make_trainer(setup)
+    state = trainer.init(params, KEY)
+    for t in range(10):
+        bx, by = loader.next_round()
+        state, mets = trainer.round(
+            state, jnp.asarray(bx), jnp.asarray(by), jax.random.fold_in(KEY, t))
+        aoi = np.asarray(state.aoi)
+        assert (aoi >= 1).all()
+        succ = np.asarray(state.last_success)
+        assert ((aoi == 1) == (succ > 0.5)).all()          # Eq. 8
+        z = np.asarray(state.zeta)
+        assert abs(z.sum() - 1) < 1e-5 and (z >= 0).all()  # Eq. 43
+        assert int(state.t) == t + 1
+        assert 0 <= float(mets["n_success"]) <= M
+
+
+def test_fl_training_reduces_loss(setup):
+    loader, params, (tx, ty), _ = setup
+    trainer, params = _make_trainer(setup)
+    state = trainer.init(params, KEY)
+
+    def test_loss(p):
+        return float(_loss(p, jnp.asarray(tx), jnp.asarray(ty)))
+
+    before = test_loss(state.params)
+    for t in range(60):
+        bx, by = loader.next_round()
+        state, _ = trainer.round(
+            state, jnp.asarray(bx), jnp.asarray(by), jax.random.fold_in(KEY, t))
+    after = test_loss(state.params)
+    assert after < before * 0.7, (before, after)
+
+
+def test_failed_clients_keep_buffers(setup):
+    """Eq. 6: a client that did not participate keeps its cumulative update."""
+    loader = setup[0]
+    # all channels dead -> nobody succeeds after round 0 training
+    env = make_stationary(jnp.zeros((N,)))
+    cfg = AsyncFLConfig(n_clients=M, n_channels=N, local_epochs=1,
+                        client_lr=0.1, server_lr=0.1)
+    trainer = AsyncFLTrainer(cfg, RandomScheduler(N, M), env, _loss, None)
+    state = trainer.init(setup[1], KEY)
+    bx, by = loader.next_round()
+    state1, m1 = trainer.round(state, jnp.asarray(bx), jnp.asarray(by), KEY)
+    buf1 = np.asarray(state1.buffers)
+    assert float(m1["n_success"]) == 0
+    bx, by = loader.next_round()
+    state2, _ = trainer.round(state1, jnp.asarray(bx), jnp.asarray(by),
+                              jax.random.fold_in(KEY, 1))
+    np.testing.assert_array_equal(buf1, np.asarray(state2.buffers))
+    # and global params did not move (|S_t| = 0)
+    np.testing.assert_allclose(
+        tree_flatten_concat(state2.params), tree_flatten_concat(state1.params))
+
+
+def test_aware_allocation_reduces_aoi_variance(setup):
+    loader = setup[0]
+    env = random_piecewise_env(jax.random.PRNGKey(7), N, 400, 3,
+                               mean_low=0.05, mean_high=0.95)
+
+    def run(use_matching):
+        cfg = AsyncFLConfig(n_clients=M, n_channels=N, local_epochs=1,
+                            client_lr=0.05, server_lr=0.05,
+                            use_matching=use_matching, use_zeta=use_matching)
+        tr = AsyncFLTrainer(cfg, GLRCUCB(N, M, history=128), env, _loss, setup[3])
+        st = tr.init(setup[1], KEY)
+        cum = 0.0
+        for t in range(120):
+            bx, by = loader.next_round()
+            st, mets = tr.round(st, jnp.asarray(bx), jnp.asarray(by),
+                                jax.random.fold_in(KEY, t))
+            cum += float(mets["aoi_var"])
+        return cum
+
+    assert run(True) <= run(False) * 1.25   # aware allocation not worse (paper Fig. 4)

@@ -1,0 +1,119 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# glr_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_channels,h", [(1, 32), (5, 300), (8, 128), (13, 513)])
+def test_glr_scan_matches_oracle(n_channels, h):
+    hist = jax.random.bernoulli(KEY, 0.4, (n_channels, h)).astype(jnp.float32)
+    counts = jnp.asarray(
+        np.random.default_rng(0).integers(0, h + 1, n_channels), jnp.int32)
+    got = ops.glr_scan(hist, counts)
+    want = ref.glr_scan(hist, counts)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(2, 40), st.floats(0.05, 0.95), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_glr_scan_property(n, p, seed):
+    k = jax.random.PRNGKey(seed)
+    hist = jax.random.bernoulli(k, p, (3, 64)).astype(jnp.float32)
+    counts = jnp.array([n, 1, 0], jnp.int32)
+    got = ops.glr_scan(hist, counts)
+    want = ref.glr_scan(hist, counts)
+    np.testing.assert_allclose(got[:1], want[:1], rtol=1e-4, atol=1e-4)
+    assert got[1] == -np.inf and got[2] == -np.inf   # n < 2 -> no split point
+
+
+def test_glr_scan_detects_synthetic_changepoint():
+    h = jnp.concatenate([jnp.zeros((1, 100)), jnp.ones((1, 100))], axis=1)
+    stat = ops.glr_scan(h, jnp.array([200]))
+    assert float(stat[0]) > 50.0
+
+
+# ---------------------------------------------------------------------------
+# weighted_aggregate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,p,dtype", [
+    (2, 64, jnp.float32),
+    (8, 5000, jnp.bfloat16),
+    (16, 2048, jnp.float32),
+    (5, 2049, jnp.bfloat16),     # non-aligned P exercises padding
+])
+def test_weighted_aggregate_matches_oracle(m, p, dtype):
+    upd = (jax.random.normal(KEY, (m, p)) * 2).astype(dtype)
+    sc = jax.random.uniform(jax.random.fold_in(KEY, 1), (m,))
+    got = ops.weighted_aggregate(upd, sc)
+    want = ref.weighted_aggregate(upd, sc)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_weighted_aggregate_mask_semantics():
+    upd = jnp.stack([jnp.ones((32,)), jnp.full((32,), 100.0)])
+    sc = jnp.array([1.0, 0.0])                 # masked-out client contributes 0
+    np.testing.assert_allclose(ops.weighted_aggregate(upd, sc), 1.0)
+
+
+@given(st.integers(1, 12), st.integers(1, 300), st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_weighted_aggregate_property(m, p, seed):
+    k = jax.random.PRNGKey(seed)
+    upd = jax.random.normal(k, (m, p))
+    sc = jax.random.uniform(jax.random.fold_in(k, 1), (m,))
+    got = ops.weighted_aggregate(upd, sc)
+    np.testing.assert_allclose(got, ref.weighted_aggregate(upd, sc),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,d,causal,window", [
+    (1, 2, 2, 128, 64, True, 0),
+    (2, 4, 2, 257, 72, True, 0),      # GQA + non-aligned seq + padded head dim
+    (1, 4, 1, 200, 128, False, 0),    # MQA encoder-style
+    (1, 2, 2, 300, 64, True, 64),     # sliding window
+    (2, 8, 4, 64, 96, True, 16),
+])
+def test_flash_attention_matches_oracle(b, hq, hkv, s, d, causal, window):
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    q = jax.random.normal(k1, (b, hq, s, d), jnp.float32) * 0.5
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32) * 0.5
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window)
+    want = ref.mha_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(KEY, (1, 2, 128, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 128, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 128, 64), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v)
+    want = ref.mha_attention(q, k, v)
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_matches_model_attn_core():
+    """The Pallas kernel and the model's chunked XLA path agree."""
+    from repro.models.attention import attn_core
+    q = jax.random.normal(KEY, (1, 4, 300, 64)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 300, 64)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 300, 64))
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = attn_core(q, k, v, causal=True, chunk=128)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)

@@ -1,0 +1,111 @@
+"""Adaptive matching (Sec. V) + marginal-contribution estimation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.contribution import (
+    aggregation_weights,
+    init_buffer,
+    loo_aggregates,
+    marginal_contribution,
+    update_buffer,
+)
+from repro.core.matching import AdaptiveMatcher
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# matching
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 8), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_match_is_permutation_of_scheduled_channels(m, seed):
+    k = jax.random.PRNGKey(seed)
+    n = m + 4
+    channels = jax.random.choice(k, n, (m,), replace=False)
+    scores = jax.random.uniform(jax.random.fold_in(k, 1), (n,))
+    contrib = jax.random.uniform(jax.random.fold_in(k, 2), (m,)) + 0.1
+    aoi = jax.random.uniform(jax.random.fold_in(k, 3), (m,)) * 10 + 1
+    matcher = AdaptiveMatcher(beta=0.5)
+    assignment, _ = matcher.match(matcher.init(), channels, scores, contrib, aoi)
+    assert sorted(np.asarray(assignment).tolist()) == sorted(np.asarray(channels).tolist())
+
+
+def test_beta_zero_is_pure_efficiency():
+    matcher = AdaptiveMatcher(beta=0.0)
+    channels = jnp.array([0, 1, 2])
+    scores = jnp.array([3.0, 2.0, 1.0, 0.0])
+    contrib = jnp.array([0.1, 0.9, 0.5])
+    aoi = jnp.array([100.0, 1.0, 1.0])       # starved client 0 must be ignored
+    assignment, _ = matcher.match(matcher.init(), channels, scores, contrib, aoi)
+    assert int(assignment[1]) == 0            # best channel -> best contributor
+
+
+def test_beta_one_prioritizes_starved_clients_when_variance_high():
+    matcher = AdaptiveMatcher(beta=1.0)
+    channels = jnp.array([0, 1, 2])
+    scores = jnp.array([3.0, 2.0, 1.0, 0.0])
+    contrib = jnp.array([0.9, 0.1, 0.1])
+    aoi = jnp.array([1.0, 50.0, 1.0])
+    assignment, st_ = matcher.match(matcher.init(), channels, scores, contrib, aoi)
+    assert int(assignment[1]) == 0            # starved client got the best channel
+    assert float(st_.beta_t) > 0.5
+
+
+def test_beta_t_scales_with_aoi_variance():
+    matcher = AdaptiveMatcher(beta=0.8)
+    state = matcher.init()
+    _, st_hi = matcher.priorities(state, jnp.ones(4), jnp.array([1.0, 1.0, 1.0, 40.0]))
+    _, st_lo = matcher.priorities(st_hi, jnp.ones(4), jnp.array([2.0, 2.0, 2.0, 2.0]))
+    assert float(st_hi.beta_t) > float(st_lo.beta_t)
+
+
+# ---------------------------------------------------------------------------
+# contribution
+# ---------------------------------------------------------------------------
+
+def test_loo_aggregates_match_naive():
+    m, p = 5, 7
+    g = jax.random.normal(KEY, (m, p))
+    w = jax.random.uniform(jax.random.fold_in(KEY, 1), (m,)) + 0.1
+    w = w / w.sum()
+    buf = init_buffer(m, p)
+    buf = update_buffer(buf, jnp.ones((m,), bool), g, g * 2.0)
+    g_loo, p_loo = loo_aggregates(buf, w)
+    for i in range(m):
+        mask = np.ones(m, bool)
+        mask[i] = False
+        naive = (w[mask, None] * np.asarray(g)[mask]).sum(0) / w[mask].sum()
+        np.testing.assert_allclose(np.asarray(g_loo)[i], naive, rtol=1e-4, atol=1e-5)
+
+
+def test_buffer_keeps_stale_entries_for_failed_clients():
+    buf = init_buffer(2, 3)
+    g1 = jnp.ones((2, 3))
+    buf = update_buffer(buf, jnp.array([True, True]), g1, g1)
+    g2 = jnp.full((2, 3), 7.0)
+    buf = update_buffer(buf, jnp.array([True, False]), g2, g2)
+    np.testing.assert_allclose(buf.grads[0], 7.0)
+    np.testing.assert_allclose(buf.grads[1], 1.0)   # Eq. 41: stale kept
+
+
+def test_contribution_rewards_divergent_gradient():
+    """A client whose gradient opposes the LOO aggregate has higher Gamma_cos."""
+    m, p = 4, 16
+    base = jax.random.normal(KEY, (p,))
+    grads = jnp.stack([base, base, base, -base])
+    buf = init_buffer(m, p)
+    buf = update_buffer(buf, jnp.ones((m,), bool), grads, grads)
+    c = marginal_contribution(buf, jnp.full((m,), 0.25))
+    assert float(c[3]) > float(c[0])
+
+
+@given(st.lists(st.floats(0.01, 10.0), min_size=2, max_size=12))
+@settings(max_examples=25, deadline=None)
+def test_aggregation_weights_simplex(contribs):
+    z = aggregation_weights(jnp.asarray(contribs, jnp.float32))
+    assert abs(float(z.sum()) - 1.0) < 1e-5
+    assert float(z.min()) >= 0.0

@@ -1,0 +1,120 @@
+"""Optimizers, data pipeline, checkpointing, pytree utils."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import FederatedLoader, dirichlet_partition, make_federated_classification
+from repro.data.dirichlet import heterogeneity_index
+from repro.optim import adamw, sgd
+from repro.optim.optimizers import apply_updates
+from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt", [sgd(0.1), sgd(0.1, momentum=0.9),
+                                 adamw(0.05), adamw(0.05, weight_decay=0.01)])
+def test_optimizer_minimizes_quadratic(opt):
+    params = {"x": jnp.array([3.0, -2.0]), "y": jnp.array([[1.5]])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2) + jnp.sum(p["y"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_grad_clipping():
+    opt = adamw(1.0, grad_clip=1.0)
+    params = {"x": jnp.zeros((3,))}
+    state = opt.init(params)
+    huge = {"x": jnp.full((3,), 1e6)}
+    upd, _ = opt.update(huge, state, params)
+    assert float(jnp.abs(upd["x"]).max()) < 20.0
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_dirichlet_partition_disjoint_and_complete():
+    labels = np.random.default_rng(0).integers(0, 10, 2000)
+    parts = dirichlet_partition(labels, 8, alpha=0.5, seed=1)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(set(all_idx.tolist()))      # disjoint
+    assert len(all_idx) == len(labels)                      # complete
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_dirichlet_alpha_controls_heterogeneity():
+    labels = np.random.default_rng(0).integers(0, 10, 6000)
+    h_iid = heterogeneity_index(dirichlet_partition(labels, 8, 100.0, seed=2), labels)
+    h_skew = heterogeneity_index(dirichlet_partition(labels, 8, 0.05, seed=2), labels)
+    assert h_skew > h_iid * 2
+
+
+def test_federated_loader_shapes():
+    cx, cy, tx, ty, px, py = make_federated_classification(4, 64, dim=16)
+    loader = FederatedLoader(cx, cy, batch_size=8, local_epochs=3)
+    bx, by = loader.next_round()
+    assert bx.shape == (4, 3, 8, 16)
+    assert by.shape == (4, 3, 8)
+    assert px.shape[0] <= 256
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "params": {"w": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3)},
+        "opt": [jnp.ones((2,)), jnp.zeros((), jnp.int32)],
+    }
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, tree)
+    save_checkpoint(d, 11, tree)
+    assert latest_step(d) == 11
+    restored, step = restore_checkpoint(d, like=tree)
+    assert step == 11
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(tree["params"]["w"], np.float32))
+    assert restored["params"]["w"].dtype == jnp.bfloat16
+    assert restored["opt"][1].dtype == jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# pytree utils
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_flatten_unflatten_roundtrip(seed):
+    k = jax.random.PRNGKey(seed)
+    tree = {
+        "a": jax.random.normal(k, (3, 4)),
+        "b": {"c": jax.random.normal(jax.random.fold_in(k, 1), (5,)),
+              "d": jnp.bfloat16(jax.random.normal(jax.random.fold_in(k, 2), (2, 2)))},
+    }
+    flat = tree_flatten_concat(tree)
+    back = tree_unflatten_concat(flat, tree)
+    for key_ in ("a",):
+        np.testing.assert_allclose(back[key_], tree[key_], rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(back["b"]["d"], np.float32),
+        np.asarray(tree["b"]["d"], np.float32), rtol=1e-2)
+    assert back["b"]["d"].dtype == jnp.bfloat16
