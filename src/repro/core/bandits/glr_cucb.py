@@ -14,19 +14,22 @@ The GLR statistic for a stream z_1..z_n is
 
 evaluated against the threshold beta(n, delta) = (1 + 1/n) log(3 n sqrt(n) / delta).
 All split points are evaluated at once from a prefix-sum (O(n) per channel
-per round) — this is the compute hot-spot that `repro.kernels.glr_scan`
-implements as a Pallas TPU kernel; the pure-jnp form below is its oracle
-and the CPU execution path.
+per round) — this is the compute hot-spot of the whole simulation: it runs
+inside every ``lax.scan`` step.  The detector therefore dispatches through
+``repro.kernels.ops.glr_scan`` (Pallas TPU kernel on TPU, the pure-jnp
+oracle on CPU); ``glr_statistic`` below is the single-stream reference form
+kept for tests and documentation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.bandits.base import rotate_assignment
+from repro.kernels import ops
 
 _EPS = 1e-6  # float32-safe: 1.0 - 1e-9 rounds to 1.0 and poisons KL with 0*log(0)
 
@@ -84,6 +87,7 @@ class GLRCUCB:
     history: int = 2048          # H — per-channel stream buffer (ring once full)
     detector_stride: int = 1     # run the GLR detector every k rounds
     min_samples: int = 8         # don't test before this many samples
+    detector_backend: Optional[str] = None  # ops.glr_scan backend (None = auto)
     name: str = "glr-cucb"
 
     # ------------------------------------------------------------------ api
@@ -162,7 +166,7 @@ class GLRCUCB:
 
         def run_detector(_):
             n_valid = jnp.minimum(counts, float(h)).astype(jnp.int32)
-            stats = jax.vmap(glr_statistic)(new_hist, n_valid)
+            stats = ops.glr_scan(new_hist, n_valid, backend=self.detector_backend)
             thresh = glr_threshold(n_valid, self.delta)
             fire = sched & (stats >= thresh) & (n_valid >= self.min_samples)
             return jnp.any(fire)

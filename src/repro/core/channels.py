@@ -122,6 +122,51 @@ def make_adversarial(table) -> ChannelEnv:
 
 
 # ---------------------------------------------------------------------------
+# batching helpers (the `repro.sim` engine vmaps over stacked envs)
+# ---------------------------------------------------------------------------
+
+def envs_stackable(envs) -> bool:
+    """True iff the envs share kind and per-leaf shapes (vmappable bucket)."""
+    first = envs[0]
+    sig = jax.tree_util.tree_map(jnp.shape, first)
+    for e in envs[1:]:
+        if e.kind != first.kind:
+            return False
+        if jax.tree_util.tree_map(jnp.shape, e) != sig:
+            return False
+    return True
+
+
+def stack_envs(envs) -> ChannelEnv:
+    """Stack same-kind/same-shape envs on a new leading batch axis.
+
+    The result is a ``ChannelEnv`` whose array leaves carry a leading batch
+    dimension — NOT directly usable with ``sample``/``means_at``; it is the
+    vmap input format consumed by ``repro.sim.simulate_aoi_regret_batch``
+    (each vmap slice sees an ordinary unbatched env).
+    """
+    if not envs:
+        raise ValueError("stack_envs: empty env list")
+    if not envs_stackable(list(envs)):
+        kinds = sorted({e.kind for e in envs})
+        raise ValueError(
+            f"stack_envs: envs must share kind and leaf shapes (kinds={kinds}); "
+            "group heterogeneous cases with repro.sim.sweep instead"
+        )
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *envs)
+
+
+def env_batch_size(env: ChannelEnv) -> int:
+    """Leading batch dim of a stacked env; 1 for an unbatched env.
+
+    Unbatched envs carry 2-D ``means``/``table`` leaves ((S, N) / (T, N));
+    ``stack_envs`` adds one leading axis.
+    """
+    lead = env.table.shape if env.kind == "adversarial" else env.means.shape
+    return 1 if len(lead) == 2 else lead[0]
+
+
+# ---------------------------------------------------------------------------
 # random scenario generators (used by benchmarks / tests / examples)
 # ---------------------------------------------------------------------------
 
@@ -144,9 +189,12 @@ def random_piecewise_env(
     means = jax.random.uniform(
         k1, (n_seg, n_channels), minval=mean_low, maxval=mean_high
     )
-    # nudge channels apart (deterministic per-channel offset, wrapped)
+    # nudge channels apart: deterministic per-channel offsets, centered so the
+    # pool stays inside the band, then clipped.  NOT wrapped — (X + c) mod span
+    # is uniform again, which would erase the separation; an additive offset
+    # keeps E[mu_k] - E[mu_j] = (k - j) * min_gap up to edge clipping.
     offs = jnp.linspace(0.0, min_gap * n_channels, n_channels, endpoint=False)
-    means = jnp.clip(means + offs[None, :] * 0.0 + 0.0, mean_low, mean_high)
+    means = jnp.clip(means + (offs - jnp.mean(offs))[None, :], mean_low, mean_high)
     if n_breakpoints > 0:
         # evenly spread breakpoints with random jitter, strictly inside (0, T)
         base = np.linspace(0, horizon, n_seg + 1)[1:-1]

@@ -28,21 +28,18 @@ class SimCarry(NamedTuple):
     cum_var_star: jnp.ndarray
 
 
-@partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve"))
-def simulate_aoi_regret(
+def simulate_aoi_regret_impl(
     scheduler,
     env: ChannelEnv,
     key: jax.Array,
     horizon: int,
     collect_curve: bool = True,
 ) -> Dict[str, jnp.ndarray]:
-    """Simulate ``scheduler`` vs the oracle for ``horizon`` rounds.
+    """Unjitted simulation core (one scheduler/env/key triple).
 
-    Returns dict with:
-      regret:       (T,) cumulative AoI regret curve (or final scalar)
-      aoi_pi/star:  final per-client AoI
-      cum_aoi_var:  (T,) cumulative AoI variance of the policy (Fig. 4 metric)
-      success_rate: overall fraction of successful transmissions
+    ``simulate_aoi_regret`` is its jitted entry point; the batched engine in
+    ``repro.sim`` vmaps this same function over stacked envs and keys, so a
+    batch-of-1 run traces the identical computation as the serial path.
     """
     m = scheduler.n_clients
 
@@ -93,6 +90,25 @@ def simulate_aoi_regret(
         "aoi_star": carry.aoi_star,
         "success_rate": jnp.sum(successes) / (horizon * m),
     }
+
+
+@partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve"))
+def simulate_aoi_regret(
+    scheduler,
+    env: ChannelEnv,
+    key: jax.Array,
+    horizon: int,
+    collect_curve: bool = True,
+) -> Dict[str, jnp.ndarray]:
+    """Simulate ``scheduler`` vs the oracle for ``horizon`` rounds.
+
+    Returns dict with:
+      regret:       (T,) cumulative AoI regret curve (or final scalar)
+      aoi_pi/star:  final per-client AoI
+      cum_aoi_var:  (T,) cumulative AoI variance of the policy (Fig. 4 metric)
+      success_rate: overall fraction of successful transmissions
+    """
+    return simulate_aoi_regret_impl(scheduler, env, key, horizon, collect_curve)
 
 
 def regret_growth_exponent(regret_curve: jnp.ndarray, burn_in: int = 100) -> float:

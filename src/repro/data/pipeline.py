@@ -34,6 +34,13 @@ class FederatedLoader:
         gather = np.arange(self.m)[:, None, None]
         return self.cx[gather, idx], self.cy[gather, idx]
 
+    def next_rounds(self, r: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(x (R, M, E, B, ...), y (R, M, E, B)) — R rounds stacked for the
+        scan-fused ``AsyncFLTrainer.run`` (same draws as R ``next_round``s)."""
+        idx = self.rng.integers(0, self.n, size=(r, self.m, self.e, self.batch))
+        gather = np.arange(self.m)[None, :, None, None]
+        return self.cx[gather, idx], self.cy[gather, idx]
+
     def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         while True:
             yield self.next_round()

@@ -93,8 +93,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         )
 
     # ------------------------------------------------------------------ round
-    @functools.partial(jax.jit, static_argnames=("self",))
-    def round(
+    def _round_impl(
         self,
         state: AsyncFLState,
         batches_x: jnp.ndarray,    # (M, E, B, ...)
@@ -178,3 +177,61 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             "zeta_max": jnp.max(new_zeta),
         }
         return new_state, metrics
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def round(
+        self,
+        state: AsyncFLState,
+        batches_x: jnp.ndarray,    # (M, E, B, ...)
+        batches_y: jnp.ndarray,    # (M, E, B)
+        key: jax.Array,
+    ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
+        return self._round_impl(state, batches_x, batches_y, key)
+
+    # ------------------------------------------------------------------ run
+    def _run_impl(self, state, batches_x, batches_y, keys):
+        def step(st, inp):
+            bx, by, k = inp
+            return self._round_impl(st, bx, by, k)
+
+        return jax.lax.scan(step, state, (batches_x, batches_y, keys))
+
+    # Two jitted variants: the donated one reuses the carried state's buffers
+    # in place (the (M, P) update matrix dominates memory), but XLA:CPU does
+    # not implement donation and would warn on every compile — so `run`
+    # donates only where donation exists.
+    @functools.partial(jax.jit, static_argnames=("self",), donate_argnums=(1,))
+    def _run_donated(self, state, batches_x, batches_y, keys):
+        return self._run_impl(state, batches_x, batches_y, keys)
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _run_plain(self, state, batches_x, batches_y, keys):
+        return self._run_impl(state, batches_x, batches_y, keys)
+
+    def run(
+        self,
+        state: AsyncFLState,
+        batches_x: jnp.ndarray,    # (R, M, E, B, ...) — R rounds of client data
+        batches_y: jnp.ndarray,    # (R, M, E, B)
+        keys: jnp.ndarray,         # (R,) per-round PRNG keys
+        n_rounds: Optional[int] = None,
+    ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
+        """Fuse ``n_rounds`` FL rounds into one ``lax.scan`` XLA program.
+
+        Semantically identical to ``n_rounds`` sequential ``round()`` calls
+        with ``keys[t]`` per round, but with no host round-trip between
+        rounds: metrics come back as device-resident (R,) arrays (one sync
+        when the caller reads them) and, on backends that support donation
+        (TPU/GPU), the input state buffers are donated to the output.
+
+        ``n_rounds`` is optional validation sugar — the actual round count is
+        the leading axis of ``keys``/``batches_*``.
+        """
+        r = int(keys.shape[0])
+        if n_rounds is not None and n_rounds != r:
+            raise ValueError(f"run: n_rounds={n_rounds} != leading axis {r}")
+        if int(batches_x.shape[0]) != r or int(batches_y.shape[0]) != r:
+            raise ValueError(
+                f"run: batches leading axis {batches_x.shape[0]} != keys {r}")
+        fn = self._run_plain if jax.default_backend() == "cpu" else self._run_donated
+        return fn(state, batches_x, batches_y, keys)

@@ -22,9 +22,38 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def glr_scan(hist: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
-    """GLR change-point statistic per channel.  hist (N, H), counts (N,) -> (N,)."""
-    return _glr.glr_scan(hist, counts, interpret=_interpret())
+_GLR_BACKENDS = ("pallas", "pallas_interpret", "jnp")
+
+
+def glr_scan(
+    hist: jnp.ndarray, counts: jnp.ndarray, backend: str | None = None
+) -> jnp.ndarray:
+    """GLR change-point statistic per channel.  hist (N, H), counts (N,) -> (N,).
+
+    This runs inside every step of the simulation scan (the GLR-CUCB
+    detector), so the dispatch matters: on TPU the Pallas kernel is the fast
+    path, but on CPU Pallas only has interpret mode — a Python-built
+    emulation graph that is far slower than plain XLA.  Backends:
+
+      None               auto: "pallas" on TPU, "jnp" elsewhere (the hot-path
+                         default used by ``GLRCUCB.update``)
+      "pallas"           compiled Pallas kernel (interpret mode off-TPU)
+      "pallas_interpret" Pallas kernel forced into interpret mode (kernel
+                         semantics tests)
+      "jnp"              the pure-jnp oracle in ``repro.kernels.ref``
+
+    All backends implement identical semantics; tests assert the pallas and
+    jnp paths agree inside a jitted ``GLRCUCB.update``.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return ref.glr_scan(hist, counts)
+    if backend == "pallas":
+        return _glr.glr_scan(hist, counts, interpret=_interpret())
+    if backend == "pallas_interpret":
+        return _glr.glr_scan(hist, counts, interpret=True)
+    raise ValueError(f"glr_scan: unknown backend {backend!r}; use one of {_GLR_BACKENDS}")
 
 
 def weighted_aggregate(updates: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:

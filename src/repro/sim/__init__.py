@@ -1,0 +1,17 @@
+"""Batched simulation engine — see README.md in this directory.
+
+Public API:
+  simulate_aoi_regret_batch  vmapped regret simulation over envs x seeds
+  SweepCase / sweep          heterogeneous sweep driver (vmappable buckets)
+  group_cases                bucket partitioning (exposed for tests)
+"""
+from repro.sim.engine import simulate_aoi_regret_batch
+from repro.sim.sweep import BucketReport, SweepCase, group_cases, sweep
+
+__all__ = [
+    "simulate_aoi_regret_batch",
+    "SweepCase",
+    "BucketReport",
+    "group_cases",
+    "sweep",
+]

@@ -1,0 +1,115 @@
+"""Heterogeneous sweep driver: group cases into vmappable buckets.
+
+A figure-level sweep mixes schedulers (different state pytrees), horizons
+and env families — those cannot share one vmap.  ``sweep`` groups cases by
+(scheduler config, horizon, env treedef + leaf shapes), runs each bucket
+through ``simulate_aoi_regret_batch`` as ONE compiled program, and returns
+per-case results keyed by case name.
+
+Scheduler configs are frozen dataclasses (hashable, compared by value), so
+two cases with "the same" scheduler built twice still land in one bucket
+and share one executable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channels import ChannelEnv, stack_envs
+from repro.sim.engine import simulate_aoi_regret_batch
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCase:
+    """One (name, scheduler, env, key, horizon) simulation request."""
+
+    name: str
+    scheduler: Any
+    env: ChannelEnv
+    key: jax.Array
+    horizon: int
+
+
+@dataclasses.dataclass
+class BucketReport:
+    """Execution record for one vmappable bucket (for BENCH_sim.json)."""
+
+    names: List[str]
+    batch: int
+    compile_s: float
+    wall_s: float
+
+
+def _bucket_key(case: SweepCase):
+    leaves, treedef = jax.tree_util.tree_flatten(case.env)
+    shapes = tuple((tuple(l.shape), str(l.dtype)) for l in leaves)
+    return (case.scheduler, case.horizon, treedef, shapes)
+
+
+def group_cases(cases: Sequence[SweepCase]) -> List[List[SweepCase]]:
+    """Partition cases into vmappable buckets, preserving first-seen order."""
+    buckets: Dict[Any, List[SweepCase]] = {}
+    order = []
+    for c in cases:
+        k = _bucket_key(c)
+        if k not in buckets:
+            buckets[k] = []
+            order.append(k)
+        buckets[k].append(c)
+    return [buckets[k] for k in order]
+
+
+def sweep(
+    cases: Sequence[SweepCase],
+    collect_curve: bool = True,
+    block: bool = True,
+) -> Tuple[Dict[str, Dict[str, jnp.ndarray]], List[BucketReport]]:
+    """Run every case, batching compatible ones into single XLA programs.
+
+    Returns ``(results, report)``:
+      results: case name -> the ``simulate_aoi_regret`` result dict for that
+               case (batch axis already stripped).
+      report:  one ``BucketReport`` per executed bucket: ``compile_s`` from
+               an AOT lower+compile, ``wall_s`` the blocked execution time.
+               ``block=False`` skips AOT and blocking for latency-insensitive
+               callers; both times then record only dispatch (not execution)
+               and must not be used as measurements.
+    """
+    names = [c.name for c in cases]
+    if len(set(names)) != len(names):
+        raise ValueError(f"sweep: duplicate case names: {names}")
+
+    results: Dict[str, Dict[str, jnp.ndarray]] = {}
+    report: List[BucketReport] = []
+    for bucket in group_cases(cases):
+        envs = stack_envs([c.env for c in bucket])
+        keys = jnp.stack([c.key for c in bucket])
+        sched, horizon = bucket[0].scheduler, bucket[0].horizon
+
+        t0 = time.perf_counter()
+        if block:
+            # AOT-compile to separate compile_s from wall_s without paying a
+            # throwaway warm-up execution of the whole bucket
+            compiled = simulate_aoi_regret_batch.lower(
+                sched, envs, keys, horizon, collect_curve=collect_curve
+            ).compile()
+            compile_s = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            out = compiled(envs, keys)
+            jax.block_until_ready(out)
+            wall_s = time.perf_counter() - t1
+        else:
+            out = simulate_aoi_regret_batch(
+                sched, envs, keys, horizon, collect_curve=collect_curve)
+            compile_s = wall_s = time.perf_counter() - t0
+
+        for i, c in enumerate(bucket):
+            results[c.name] = jax.tree_util.tree_map(lambda x, i=i: x[i], out)
+        report.append(BucketReport(
+            names=[c.name for c in bucket], batch=len(bucket),
+            compile_s=compile_s, wall_s=wall_s))
+    return results, report

@@ -1,8 +1,96 @@
 """Shared test fixtures.  NOTE: no XLA_FLAGS here by design — smoke tests
 and kernel tests must see the real (single-CPU) device; only
-repro.launch.dryrun forces 512 placeholder devices, in its own process."""
+repro.launch.dryrun forces 512 placeholder devices, in its own process.
+
+If the real `hypothesis` package is unavailable (the pinned container does
+not ship it and installing packages is off-limits), a minimal deterministic
+stub is registered in ``sys.modules`` *before* test modules import it.  The
+stub draws ``max_examples`` pseudo-random examples from each strategy with a
+fixed seed — no shrinking, no database, but the property tests still run.
+"""
+import sys
+
 import jax
 import pytest
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(size)]
+
+        return _Strategy(draw)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _settings(**kw):
+        def deco(fn):
+            fn._stub_settings = {**getattr(fn, "_stub_settings", {}), **kw}
+            return fn
+
+        return deco
+
+    def _given(*strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper():
+                conf = getattr(wrapper, "_stub_settings", None) or getattr(
+                    fn, "_stub_settings", {}
+                )
+                n = conf.get("max_examples", 10)
+                rng = random.Random(0)
+                for _ in range(n):
+                    args = [s.example_from(rng) for s in strategies]
+                    kwargs = {
+                        k: s.example_from(rng) for k, s in kw_strategies.items()
+                    }
+                    fn(*args, **kwargs)
+
+            # deliberately NOT functools.wraps: pytest must see a zero-arg
+            # signature, or it would treat the property arguments as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._stub_settings = getattr(fn, "_stub_settings", {})
+            return wrapper
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.booleans = _booleans
+    _st.lists = _lists
+    _st.sampled_from = _sampled_from
+    _hyp.strategies = _st
+    _hyp.__stub__ = True
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

@@ -161,7 +161,13 @@ def test_mexp3_beats_random_adversarial():
 
 
 def test_sublinear_regret_growth():
-    env = random_piecewise_env(KEY, 5, 6000, 2)
+    # Controlled env (was a random draw, which is breakpoint-placement
+    # sensitive: a break inside the second half inflates the index and made
+    # this test flaky).  Both breaks land in the first half, so once the
+    # detector has re-converged the second-half growth rate must be lower.
+    profile = jnp.array([0.9, 0.7, 0.5, 0.3, 0.1])
+    means = jnp.stack([jnp.roll(profile, s) for s in range(3)])
+    env = make_piecewise(means, jnp.array([800, 1600]))
     out = simulate_aoi_regret(GLRCUCB(5, 2, history=512, detector_stride=4), env, KEY, 6000)
     assert float(sublinearity_index(out["regret"])) < 1.0
 

@@ -52,6 +52,32 @@ def test_random_piecewise_env_breaks_sorted_and_bounded():
     assert env.means.shape == (6, 6)
 
 
+def test_random_piecewise_env_min_gap_offsets_applied():
+    """Regression: the documented min_gap channel separation used to be a
+    no-op (`offs * 0.0`).  The per-channel offset must actually shift the
+    draws — centered, additive (not wrapped: mod would restore uniformity and
+    erase the separation), clipped to the band."""
+    key = jax.random.PRNGKey(3)
+    low, high, gap, n = 0.1, 0.9, 0.1, 5
+    base = random_piecewise_env(key, n, 1000, 2, mean_low=low, mean_high=high,
+                                min_gap=0.0)
+    env = random_piecewise_env(key, n, 1000, 2, mean_low=low, mean_high=high,
+                               min_gap=gap)
+    m0, m1 = np.asarray(base.means), np.asarray(env.means)
+    assert (m1 >= low - 1e-6).all() and (m1 <= high + 1e-6).all()
+    # exact formula: centered offsets added then clipped
+    offs = np.linspace(0.0, gap * n, n, endpoint=False)
+    want = np.clip(m0 + (offs - offs.mean()), low, high)
+    np.testing.assert_allclose(m1, want, atol=1e-6)
+    # separation is delivered where clipping didn't bite: the realized shift
+    # between adjacent channels grows by exactly min_gap
+    unclipped = (want > low + 1e-6) & (want < high - 1e-6)
+    shift = m1 - m0
+    both = unclipped[:, 1:] & unclipped[:, :-1]
+    np.testing.assert_allclose(
+        (shift[:, 1:] - shift[:, :-1])[both], gap, atol=1e-5)
+
+
 def test_random_adversarial_env_flip_rate():
     env = random_adversarial_env(jax.random.PRNGKey(0), 4, 5000, flip_prob=0.01)
     tbl = np.asarray(env.table, dtype=np.int32)

@@ -1,0 +1,165 @@
+"""Batched simulation engine (`repro.sim`): batch-vs-serial equivalence,
+env stacking rules, and heterogeneous sweep bucketing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB, MExp3, RandomScheduler
+from repro.core.channels import (
+    env_batch_size,
+    make_stationary,
+    random_adversarial_env,
+    random_piecewise_env,
+    stack_envs,
+)
+from repro.core.regret import simulate_aoi_regret
+from repro.sim import SweepCase, group_cases, simulate_aoi_regret_batch, sweep
+
+KEY = jax.random.PRNGKey(0)
+T = 600
+
+
+# ---------------------------------------------------------------------------
+# batch-of-1 must reproduce the serial path bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sched,env_fn", [
+    (GLRCUCB(5, 2, history=128, detector_stride=4),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+    (MExp3(5, 2, share_alpha=1e-3),
+     lambda: random_adversarial_env(KEY, 5, T, flip_prob=0.01)),
+    (RandomScheduler(5, 2), lambda: make_stationary(jnp.linspace(0.9, 0.1, 5))),
+])
+def test_batch1_bitwise_matches_serial(sched, env_fn):
+    env = env_fn()
+    serial = simulate_aoi_regret(sched, env, KEY, T)
+    batched = simulate_aoi_regret_batch(
+        sched, stack_envs([env]), jnp.stack([KEY]), T)
+    for k in serial:
+        np.testing.assert_array_equal(
+            np.asarray(serial[k]), np.asarray(batched[k][0]), err_msg=k)
+
+
+def test_multi_seed_batch_matches_per_seed_serial():
+    sched = GLRCUCB(4, 2, history=64, detector_stride=4)
+    envs = [random_piecewise_env(jax.random.fold_in(KEY, i), 4, T, 2)
+            for i in range(4)]
+    keys = jnp.stack([jax.random.fold_in(KEY, 100 + i) for i in range(4)])
+    out = simulate_aoi_regret_batch(sched, stack_envs(envs), keys, T)
+    for i, env in enumerate(envs):
+        want = simulate_aoi_regret(sched, env, keys[i], T)
+        np.testing.assert_allclose(
+            np.asarray(out["regret"][i]), np.asarray(want["regret"]),
+            rtol=1e-6, atol=1e-4)
+        np.testing.assert_allclose(
+            float(out["final_regret"][i]), float(want["final_regret"]),
+            rtol=1e-6)
+
+
+def test_env_broadcast_over_seed_batch():
+    """One env, many seeds: env_axis=None broadcasts the unbatched env."""
+    sched = RandomScheduler(5, 2)
+    env = make_stationary(jnp.linspace(0.9, 0.1, 5))
+    keys = jnp.stack([jax.random.fold_in(KEY, i) for i in range(3)])
+    out = simulate_aoi_regret_batch(sched, env, keys, T, env_axis=None)
+    assert out["final_regret"].shape == (3,)
+    # different seeds -> different trajectories
+    r = np.asarray(out["final_regret"])
+    assert len(set(r.tolist())) > 1
+
+
+def test_batch_requires_some_axis():
+    env = make_stationary(jnp.linspace(0.9, 0.1, 5))
+    with pytest.raises(ValueError, match="nothing to batch"):
+        simulate_aoi_regret_batch(
+            RandomScheduler(5, 2), env, KEY, T, env_axis=None, key_axis=None)
+
+
+# ---------------------------------------------------------------------------
+# env stacking
+# ---------------------------------------------------------------------------
+
+def test_stack_envs_shapes_and_batch_size():
+    envs = [random_piecewise_env(jax.random.fold_in(KEY, i), 6, T, 2)
+            for i in range(3)]
+    stacked = stack_envs(envs)
+    assert stacked.means.shape == (3,) + envs[0].means.shape
+    assert stacked.kind == "piecewise"
+    assert env_batch_size(stacked) == 3
+    assert env_batch_size(envs[0]) == 1
+
+
+def test_stack_envs_rejects_kind_mismatch():
+    a = make_stationary(jnp.linspace(0.9, 0.1, 5))
+    b = random_adversarial_env(KEY, 5, T)
+    with pytest.raises(ValueError, match="share kind"):
+        stack_envs([a, b])
+
+
+def test_stack_envs_rejects_shape_mismatch():
+    a = random_piecewise_env(KEY, 5, T, 2)    # 2 breakpoints -> (3, 5) means
+    b = random_piecewise_env(KEY, 5, T, 4)    # 4 breakpoints -> (5, 5) means
+    with pytest.raises(ValueError, match="share kind"):
+        stack_envs([a, b])
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+def test_sweep_buckets_by_scheduler_and_env_shape():
+    s1 = GLRCUCB(5, 2, history=64, detector_stride=4)
+    s2 = MExp3(5, 2)
+    env_a = random_piecewise_env(KEY, 5, T, 2)
+    env_b = random_piecewise_env(jax.random.fold_in(KEY, 1), 5, T, 2)
+    env_c = random_piecewise_env(KEY, 5, T, 4)      # different means shape
+    cases = [
+        SweepCase("a", s1, env_a, KEY, T),
+        SweepCase("b", s1, env_b, jax.random.fold_in(KEY, 9), T),
+        SweepCase("c", s1, env_c, KEY, T),
+        SweepCase("d", s2, env_a, KEY, T),
+    ]
+    buckets = group_cases(cases)
+    sizes = sorted(len(b) for b in buckets)
+    assert sizes == [1, 1, 2]          # {a,b} batch; c and d alone
+
+
+def test_sweep_results_match_serial_per_case():
+    s1 = GLRCUCB(5, 2, history=64, detector_stride=4)
+    s2 = MExp3(5, 2)
+    env_a = random_piecewise_env(KEY, 5, T, 2)
+    env_b = random_piecewise_env(jax.random.fold_in(KEY, 1), 5, T, 2)
+    cases = [
+        SweepCase("a", s1, env_a, KEY, T),
+        SweepCase("b", s1, env_b, jax.random.fold_in(KEY, 9), T),
+        SweepCase("d", s2, env_a, KEY, T),
+    ]
+    results, report = sweep(cases, block=True)
+    assert set(results) == {"a", "b", "d"}
+    assert sum(b.batch for b in report) == 3
+    for c in cases:
+        want = simulate_aoi_regret(c.scheduler, c.env, c.key, c.horizon)
+        np.testing.assert_allclose(
+            float(results[c.name]["final_regret"]), float(want["final_regret"]),
+            rtol=1e-6, err_msg=c.name)
+
+
+def test_sweep_rejects_duplicate_names():
+    env = make_stationary(jnp.linspace(0.9, 0.1, 5))
+    s = RandomScheduler(5, 2)
+    with pytest.raises(ValueError, match="duplicate"):
+        sweep([SweepCase("x", s, env, KEY, 50),
+               SweepCase("x", s, env, KEY, 50)])
+
+
+def test_identical_scheduler_configs_share_bucket():
+    """Two separately-built but equal scheduler configs land in one bucket."""
+    env = random_piecewise_env(KEY, 5, T, 2)
+    cases = [
+        SweepCase("a", GLRCUCB(5, 2, history=64), env, KEY, T),
+        SweepCase("b", GLRCUCB(5, 2, history=64),
+                  random_piecewise_env(jax.random.fold_in(KEY, 3), 5, T, 2),
+                  jax.random.fold_in(KEY, 4), T),
+    ]
+    assert [len(b) for b in group_cases(cases)] == [2]
