@@ -1,10 +1,14 @@
 """Benchmark harness — one function per paper table/figure.
 
-  fig2a_regret       AoI regret: GLR-CUCB / M-Exp3 (+AA) vs random (Fig. 2a)
+  fig2a_regret       AoI regret: GLR-CUCB / M-Exp3 (+AA) vs random and the
+                     related-work baselines (channel-aware, Lyapunov) (Fig. 2a)
   fig2b_breakpoints  GLR-CUCB regret vs number of breakpoints C_T   (Fig. 2b)
   fig2c_scale        M-Exp3 regret vs |C(N, M)|                     (Fig. 2c)
-  fig3_accuracy      FL test accuracy under both channel regimes    (Fig. 3)
-  fig4_fairness      cumulative AoI variance (fairness)             (Fig. 4)
+  fig3_accuracy      FL test accuracy, mean±std over seeds, both regimes,
+                     paper policies vs related-work baselines        (Fig. 3)
+  fig4_fairness      cumulative AoI variance (fairness), mean±std    (Fig. 4)
+  fl_batch           serial-vs-batched speedup of the vmapped FL engine
+                     (simulate_fl_batch) + batch-of-1 bitwise parity
   kernels            Pallas kernel wall-time vs jnp oracle (interpret mode)
   roofline           dry-run roofline table (reads experiments/dryrun/*.json)
 
@@ -12,19 +16,22 @@ All regret figures run on the batched `repro.sim` engine: cases are grouped
 into vmappable buckets and each bucket executes as ONE XLA program (vmap
 over seeds/envs).  fig2c additionally measures the serial per-seed baseline
 in the same process and reports the batched speedup.  The FL figures run on
-the scan-fused ``AsyncFLTrainer.run`` (no per-round host sync; eval only at
-checkpoints).
+the batched FL engine (``simulate_fl_batch``): all seeds of one policy
+train as ONE vmapped scan program per checkpoint segment — error bars cost
+one executable, not S runs.
 
 Output: ``name,us_per_call,derived`` CSV on stdout plus ``BENCH_sim.json``
-(per-figure wall time, fig2c serial-vs-batched speedup, batch-of-1 parity)
-at the repo root, so engine performance is tracked across PRs.
+(per-figure wall time, fig2c + fl_batch serial-vs-batched speedups,
+batch-of-1 parity for both engines) at the repo root, so engine performance
+is tracked across PRs.
 
-``--quick`` shrinks every figure (T=500, single seed, short FL run) for CI
+``--quick`` shrinks every figure (T=500, few seeds, short FL run) for CI
 smoke coverage.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import glob
 import json
 import os
@@ -35,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bandits import (
-    AoIAware, GLRCUCB, MExp3, RandomScheduler, RoundRobinScheduler)
+    AoIAware, ChannelAwareAsync, GLRCUCB, LyapunovSched, MExp3,
+    RandomScheduler, RoundRobinScheduler)
 from repro.core.channels import (
     make_stationary,
     random_adversarial_env,
@@ -47,7 +55,7 @@ from repro.core.regret import (
     simulate_aoi_regret,
     sublinearity_index,
 )
-from repro.sim import SweepCase, simulate_aoi_regret_batch, sweep
+from repro.sim import SweepCase, simulate_aoi_regret_batch, simulate_fl_batch, sweep
 
 KEY = jax.random.PRNGKey(42)
 ROWS = []
@@ -92,6 +100,8 @@ def fig2a_regret():
     scheds = [
         ("random", RandomScheduler(N, M)),
         ("round-robin", RoundRobinScheduler(N, M)),          # ablation: fair, no learning
+        ("channel-aware", ChannelAwareAsync(N, M)),          # Hu et al.-style baseline
+        ("lyapunov", LyapunovSched(N, M)),                   # Perazzone et al.-style
         ("glr-cucb", GLRCUCB(N, M, history=1024, detector_stride=5)),
         ("cucb-static", GLRCUCB(N, M, history=1024,          # ablation: detector off
                                 detector_stride=10**9)),
@@ -103,6 +113,8 @@ def fig2a_regret():
         # adversarial: M-Exp3 with the Exp3.S weight-sharing term (the family
         # the paper derives from [34]; plain Exp3 cannot track mid-stream shifts)
         ("random", RandomScheduler(N, M)),
+        ("channel-aware", ChannelAwareAsync(N, M)),
+        ("lyapunov", LyapunovSched(N, M)),
         ("m-exp3", MExp3(N, M, gamma=0.5, share_alpha=1e-3)),
         ("aa-m-exp3", AoIAware(MExp3(N, M, gamma=0.5, share_alpha=1e-3))),
         ("glr-cucb", GLRCUCB(N, M, history=1024, detector_stride=5)),
@@ -239,8 +251,7 @@ def _skewed_piecewise(key, n, horizon, c_t, high=0.95, exp=4.0):
     return make_piecewise(means, brk)
 
 
-def _make_problem(m, alpha, dim, noise, spc):
-    from repro.data import FederatedLoader
+def _make_problem(m, alpha, dim, noise, spc, hidden=96):
     from repro.data.dirichlet import dirichlet_partition
     from repro.data.synthetic import SyntheticClassification
 
@@ -250,10 +261,11 @@ def _make_problem(m, alpha, dim, noise, spc):
     parts = dirichlet_partition(try_, m, alpha, seed=3, min_per_client=spc)
     cx = np.stack([trx[np.resize(p, spc)] for p in parts])
     cy = np.stack([try_[np.resize(p, spc)] for p in parts])
-    loader = FederatedLoader(cx, cy, batch_size=16, local_epochs=3, seed=4)
     k1, k2 = jax.random.split(jax.random.PRNGKey(5))
-    params = {"w1": jax.random.normal(k1, (dim, 96)) * 0.1, "b1": jnp.zeros(96),
-              "w2": jax.random.normal(k2, (96, 10)) * 0.1, "b2": jnp.zeros(10)}
+    params = {"w1": jax.random.normal(k1, (dim, hidden)) * 0.1,
+              "b1": jnp.zeros(hidden),
+              "w2": jax.random.normal(k2, (hidden, 10)) * 0.1,
+              "b2": jnp.zeros(10)}
 
     def logits(p, x):
         return jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
@@ -262,74 +274,208 @@ def _make_problem(m, alpha, dim, noise, spc):
         lg = jax.nn.log_softmax(logits(p, x))
         return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
 
-    def test(p):
-        return float(jnp.mean(
-            jnp.argmax(logits(p, jnp.asarray(tex)), 1) == jnp.asarray(tey)))
+    tex_j, tey_j = jnp.asarray(tex), jnp.asarray(tey)
 
-    return loader, params, loss_fn, test
+    @jax.jit
+    def acc_batch(params_b):
+        """(B,) test accuracies for a batch of parameter pytrees."""
+        def acc(p):
+            return jnp.mean(
+                (jnp.argmax(logits(p, tex_j), 1) == tey_j).astype(jnp.float32))
+        return jax.vmap(acc)(params_b)
+
+    return (cx, cy), params, loss_fn, acc_batch
 
 
-def _fl_run(scheduler, env, use_matching, rounds, m, n, loader, params0,
-            loss_fn, test, track=(40, 80)):
-    """Scan-fused FL training: the round loop runs on-device in checkpoint
-    segments — metrics sync once per segment, eval only at checkpoints."""
+def _ms(vals) -> str:
+    """mean±std formatting for the derived CSV field."""
+    v = np.asarray(vals)
+    return f"{v.mean():.3f}±{v.std():.3f}"
+
+
+def _fold_grid(base_key, offsets: jnp.ndarray) -> jnp.ndarray:
+    """``fold_in(base_key, o)`` for every entry of an integer array, in ONE
+    dispatch (bitwise-identical to the per-element Python loop, which costs
+    S x R host round-trips inside timed regions)."""
+    flat = jax.vmap(lambda o: jax.random.fold_in(base_key, o))(jnp.ravel(offsets))
+    return flat.reshape(offsets.shape + flat.shape[1:])
+
+
+def _fl_run_batched(scheduler, env, use_matching, rounds, m, n, data,
+                    params0, loss_fn, acc_batch, n_seeds, track=(40, 80)):
+    """Multi-seed FL on the batched engine: all seeds of one policy run as
+    ONE vmapped scan program per checkpoint segment — metrics sync once per
+    segment, eval only at checkpoints.  Returns per-seed arrays for error
+    bars (mean±std over seeds is the Fig. 3/4 claim)."""
+    from repro.data import BatchedFederatedLoader
     from repro.fl import AsyncFLConfig, AsyncFLTrainer
+    cx, cy = data
     cfg = AsyncFLConfig(n_clients=m, n_channels=n, local_epochs=3,
                         client_lr=0.15, server_lr=0.15,
                         use_matching=use_matching, use_zeta=use_matching)
     tr = AsyncFLTrainer(cfg, scheduler, env, loss_fn)
-    st = tr.init(params0, KEY)
+    loader = BatchedFederatedLoader(cx, cy, batch_size=16, local_epochs=3,
+                                    seeds=[4 + i for i in range(n_seeds)])
+    init_keys = jnp.stack([jax.random.fold_in(KEY, 7000 + i)
+                           for i in range(n_seeds)])
+    states = tr.init_batch(params0, init_keys)
     checkpoints = sorted({t for t in track if t < rounds} | {rounds})
-    cum_var, curve = 0.0, {}
+    cum_var, curve = np.zeros((n_seeds,)), {}
     t0 = time.perf_counter()
     start = 0
     for cp in checkpoints:
         seg = cp - start
         bx, by = loader.next_rounds(seg)
-        keys = jnp.stack(
-            [jax.random.fold_in(KEY, t) for t in range(start, cp)])
-        st, mets = tr.run(st, jnp.asarray(bx), jnp.asarray(by), keys,
-                          n_rounds=seg)
-        cum_var += float(jnp.sum(mets["aoi_var"]))   # one sync per segment
+        rkeys = _fold_grid(KEY, 500_000 * (jnp.arange(n_seeds) + 1)[:, None]
+                           + jnp.arange(start, cp)[None, :])
+        states, mets = simulate_fl_batch(
+            tr, states, jnp.asarray(bx), jnp.asarray(by), rkeys)
+        cum_var += np.asarray(jnp.sum(mets["aoi_var"], axis=1))  # one sync/segment
         if cp in track:
-            curve[cp] = round(test(st.params), 3)
+            curve[cp] = _ms(acc_batch(states.params))
         start = cp
-    us = (time.perf_counter() - t0) / rounds * 1e6
-    return test(st.params), cum_var, curve, us
+    us = (time.perf_counter() - t0) / (rounds * n_seeds) * 1e6
+    return np.asarray(acc_batch(states.params)), cum_var, curve, us
 
 
 def fig3_fig4_fl():
+    """Fig. 3 (accuracy) / Fig. 4 (fairness) with mean±std error bars over
+    seeds, paper policies next to the related-work baselines — every policy
+    runs through the identical batched-FL path and matching layer."""
     rounds, track = (30, (10, 20)) if QUICK else (150, (40, 80))
+    n_seeds = 2 if QUICK else 8
     # piecewise-stationary, the paper's large scale: N=30, M=20
     m, n = 20, 30
-    loader, params, loss_fn, test = _make_problem(m, alpha=0.1, dim=48,
-                                                  noise=1.0, spc=192)
+    data, params, loss_fn, acc_batch = _make_problem(m, alpha=0.1, dim=48,
+                                                     noise=1.0, spc=192)
     env = _skewed_piecewise(jax.random.PRNGKey(9), n, rounds, 4)
     for name, sched, match in [
         ("random", RandomScheduler(n, m), False),
+        ("channel-aware", ChannelAwareAsync(n, m), False),
+        ("lyapunov", LyapunovSched(n, m), False),
         ("glr-cucb", GLRCUCB(n, m, history=256), False),
         ("glr-cucb+aware", GLRCUCB(n, m, history=256), True),
     ]:
-        acc, var, curve, us = _fl_run(sched, env, match, rounds, m, n,
-                                      loader, params, loss_fn, test, track)
-        row(f"fig3/piecewise/{name}", us, f"acc={acc:.3f};curve={curve}")
-        row(f"fig4/piecewise/{name}", us, f"cum_aoi_var={var:.0f}")
+        accs, var, curve, us = _fl_run_batched(
+            sched, env, match, rounds, m, n, data, params, loss_fn,
+            acc_batch, n_seeds, track)
+        row(f"fig3/piecewise/{name}", us,
+            f"acc={_ms(accs)};seeds={n_seeds};curve={curve}")
+        row(f"fig4/piecewise/{name}", us, f"cum_aoi_var={_ms(var)}")
 
     # extremely non-stationary, the paper's small scale: N=6, M=4
     m, n = 4, 6
-    loader, params, loss_fn, test = _make_problem(m, alpha=0.1, dim=48,
-                                                  noise=1.0, spc=192)
+    data, params, loss_fn, acc_batch = _make_problem(m, alpha=0.1, dim=48,
+                                                     noise=1.0, spc=192)
     aenv = random_adversarial_env(jax.random.PRNGKey(10), n, rounds,
                                   flip_prob=0.01)
     for name, sched, match in [
         ("random", RandomScheduler(n, m), False),
+        ("channel-aware", ChannelAwareAsync(n, m), False),
+        ("lyapunov", LyapunovSched(n, m), False),
         ("m-exp3", MExp3(n, m, share_alpha=1e-3), False),
         ("m-exp3+aware", MExp3(n, m, share_alpha=1e-3), True),
     ]:
-        acc, var, curve, us = _fl_run(sched, aenv, match, rounds, m, n,
-                                      loader, params, loss_fn, test, track)
-        row(f"fig3/adversarial/{name}", us, f"acc={acc:.3f};curve={curve}")
-        row(f"fig4/adversarial/{name}", us, f"cum_aoi_var={var:.0f}")
+        accs, var, curve, us = _fl_run_batched(
+            sched, aenv, match, rounds, m, n, data, params, loss_fn,
+            acc_batch, n_seeds, track)
+        row(f"fig3/adversarial/{name}", us,
+            f"acc={_ms(accs)};seeds={n_seeds};curve={curve}")
+        row(f"fig4/adversarial/{name}", us, f"cum_aoi_var={_ms(var)}")
+
+
+# ---------------------------------------------------------------------------
+# fl_batch — serial-vs-batched speedup of the FL engine + batch-of-1 parity
+# ---------------------------------------------------------------------------
+
+def fl_batch_bench():
+    """The FL analogue of the fig2c speedup row, measured as the complete
+    Fig. 3 reproduction workflow: per-seed accuracy curves need a checkpoint
+    eval every few rounds, so both paths run checkpoint-segmented training —
+    segments of scan-fused rounds, a metric sync and a test-set eval at each
+    checkpoint.  Serially that is S x (per-segment dispatch + eval + host
+    sync); batched, every segment is ONE vmapped program and ONE vmapped
+    eval for all S seeds.  Also re-checks batch-of-1 bitwise parity (the
+    engine's contract) on every run."""
+    from repro.data import BatchedFederatedLoader
+    from repro.fl import AsyncFLConfig, AsyncFLTrainer
+    n_seeds = 2 if QUICK else 8
+    seg, n_segs = (10, 2) if QUICK else (10, 6)
+    rounds = seg * n_segs
+    m, n = 4, 6                       # the paper's small FL scale
+    data, params, loss_fn, acc_batch = _make_problem(
+        m, alpha=0.3, dim=8, noise=1.0, spc=48, hidden=16)
+    env = _skewed_piecewise(jax.random.PRNGKey(12), n, rounds, 2)
+    cfg = AsyncFLConfig(n_clients=m, n_channels=n, local_epochs=1,
+                        client_lr=0.1, server_lr=0.1)
+    tr = AsyncFLTrainer(cfg, GLRCUCB(n, m, history=128), env, loss_fn)
+
+    loader = BatchedFederatedLoader(data[0], data[1], batch_size=4,
+                                    local_epochs=1,
+                                    seeds=[4 + i for i in range(n_seeds)])
+    bx, by = loader.next_rounds(rounds)
+    bx, by = jnp.asarray(bx), jnp.asarray(by)
+    init_keys = jnp.stack([jax.random.fold_in(KEY, 100 + i)
+                           for i in range(n_seeds)])
+    rkeys = _fold_grid(KEY, 10_000 * (jnp.arange(n_seeds) + 1)[:, None]
+                       + jnp.arange(rounds)[None, :])
+    lift1 = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+
+    def serial_all():
+        """S independent curve runs: per-seed segments, evals, syncs."""
+        for i in range(n_seeds):
+            st, cv = tr.init(params, init_keys[i]), 0.0
+            for s in range(n_segs):
+                sl = slice(s * seg, (s + 1) * seg)
+                st, mets = tr.run(st, bx[i, sl], by[i, sl], rkeys[i, sl])
+                cv += float(jnp.sum(mets["aoi_var"]))       # per-segment sync
+                float(acc_batch(lift1(st.params))[0])       # checkpoint eval
+    def batched_all():
+        st, cv = tr.init_batch(params, init_keys), np.zeros(n_seeds)
+        for s in range(n_segs):
+            sl = slice(s * seg, (s + 1) * seg)
+            st, mets = simulate_fl_batch(
+                tr, st, bx[:, sl], by[:, sl], rkeys[:, sl])
+            cv += np.asarray(jnp.sum(mets["aoi_var"], axis=1))
+            np.asarray(acc_batch(st.params))                # checkpoint eval
+
+    serial_all(); batched_all()                             # warm both paths
+    serial_s = batched_s = float("inf")
+    for _ in range(1 if QUICK else 3):                      # de-noise: best-of
+        t0 = time.perf_counter()
+        serial_all()
+        serial_s = min(serial_s, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        batched_all()
+        batched_s = min(batched_s, time.perf_counter() - t0)
+
+    # --- batch-of-1 bitwise parity (re-checked on every run) ----------------
+    st_s, mets_s = tr.run(tr.init(params, init_keys[0]), bx[0], by[0], rkeys[0])
+    st1, mets1 = simulate_fl_batch(
+        tr, tr.init_batch(params, init_keys[:1]), bx[:1], by[:1], rkeys[:1])
+    match = all(
+        np.array_equal(np.asarray(a), np.asarray(b[0]))
+        for a, b in zip(jax.tree_util.tree_leaves(st_s),
+                        jax.tree_util.tree_leaves(st1))
+    ) and all(
+        np.array_equal(np.asarray(mets_s[k]), np.asarray(mets1[k][0]))
+        for k in mets_s
+    )
+
+    speedup = serial_s / max(batched_s, 1e-9)
+    BENCH["fl_batch"] = {
+        "seeds": n_seeds,
+        "rounds": rounds,
+        "checkpoint_every": seg,
+        "serial_s": round(serial_s, 3),
+        "batched_s": round(batched_s, 3),
+        "speedup": round(speedup, 2),
+        "batch1_bitwise_match": bool(match),
+    }
+    row("sim/fl-batch1-parity", 0.0, f"bitwise_match={match}")
+    row("sim/fl-batch-speedup", 0.0,
+        f"seeds={n_seeds};rounds={rounds};serial_s={serial_s:.2f};"
+        f"batched_s={batched_s:.2f};speedup={speedup:.2f}x")
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +493,8 @@ def kernels():
 
     upd = jax.random.normal(KEY, (16, 1 << 16), jnp.bfloat16)
     sc = jax.random.uniform(KEY, (16,))
-    _, us_k = _timed(lambda: ops.weighted_aggregate(upd, sc))
+    _, us_k = _timed(lambda: ops.weighted_aggregate(upd, sc,
+                                                    backend="pallas_interpret"))
     _, us_r = _timed(lambda: ref.weighted_aggregate(upd, sc))
     row("kernel/weighted_aggregate/pallas-interp", us_k, f"ref_us={us_r:.0f}")
 
@@ -394,7 +541,7 @@ def main() -> None:
     BENCH["quick"] = QUICK
     BENCH["backend"] = jax.default_backend()
     for fig in (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
-                fig3_fig4_fl, kernels, roofline):
+                fig3_fig4_fl, fl_batch_bench, kernels, roofline):
         _figure(fig)
     with open(args.bench_out, "w") as f:
         json.dump(BENCH, f, indent=2, sort_keys=True)

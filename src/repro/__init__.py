@@ -8,8 +8,10 @@ A production-grade JAX framework reproducing and extending:
 Package map
 -----------
 core/      the paper's contribution: channel envs, AoI, bandit schedulers
-           (M-Exp3, GLR-CUCB, AoI-aware), regret harness, adaptive matching
+           (M-Exp3, GLR-CUCB, AoI-aware + the related-work baselines
+           ChannelAwareAsync, LyapunovSched), regret harness, matching
 fl/        asynchronous federated-learning runtime (Steps 1-4 of Sec. II-A)
+sim/       batched sweep engine: vmapped regret + FL Monte-Carlo programs
 models/    composable transformer zoo (GQA/MLA/MoE/SSD/RG-LRU/encoder)
 kernels/   Pallas TPU kernels (glr_scan, weighted_aggregate, flash_attention)
 data/      synthetic datasets + Dirichlet non-IID partitioner

@@ -1,7 +1,26 @@
+"""Channel-scheduling policies (Sec. IV + related-work baselines).
+
+Paper policies: ``MExp3`` (adversarial, Alg. 1), ``GLRCUCB``
+(piecewise-stationary, Alg. 2), ``AoIAware`` (AA wrapper, Sec. VI-B).
+Ablation comparators: ``RandomScheduler``, ``RoundRobinScheduler``.
+Related-work baselines: ``ChannelAwareAsync`` (Hu et al.-style
+success-probability-weighted selection) and ``LyapunovSched`` (Perazzone
+et al.-style virtual-queue drift-plus-penalty).
+
+Every policy implements the ``Scheduler`` protocol (``base.py``): frozen
+hashable config + pure functions over an explicit state pytree, so any
+policy drops into the jitted FL round, the regret harness, the Sec.-V
+matcher, and the batched ``repro.sim`` engines unchanged.  Protocol
+invariants (M distinct valid channels from ``select``, structure/dtype
+preservation in ``update``, finite (N,) ``channel_scores``) are enforced
+for ALL policies by ``tests/test_scheduler_properties.py``.
+"""
 from repro.core.bandits.base import Scheduler, combinations_array
 from repro.core.bandits.mexp3 import MExp3
 from repro.core.bandits.glr_cucb import GLRCUCB, glr_statistic, bernoulli_kl
 from repro.core.bandits.aoi_aware import AoIAware
+from repro.core.bandits.channel_aware import ChannelAwareAsync
+from repro.core.bandits.lyapunov import LyapunovSched
 from repro.core.bandits.random_policy import RandomScheduler
 from repro.core.bandits.round_robin import RoundRobinScheduler
 from repro.core.bandits.oracle import oracle_assign
@@ -14,6 +33,8 @@ __all__ = [
     "glr_statistic",
     "bernoulli_kl",
     "AoIAware",
+    "ChannelAwareAsync",
+    "LyapunovSched",
     "RandomScheduler",
     "RoundRobinScheduler",
     "oracle_assign",

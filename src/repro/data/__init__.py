@@ -4,4 +4,4 @@ from repro.data.synthetic import (
     synthetic_lm_batches,
     make_federated_classification,
 )
-from repro.data.pipeline import FederatedLoader
+from repro.data.pipeline import BatchedFederatedLoader, FederatedLoader

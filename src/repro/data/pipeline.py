@@ -4,10 +4,16 @@ Each client draws mini-batches from its own (non-IID) shard.  The loader
 yields stacked ``(M, batch, ...)`` arrays so one FL round — including the
 E local SGD epochs of every participating client — is a single jitted,
 vmapped step.
+
+For multi-seed Monte-Carlo FL (``repro.sim.simulate_fl_batch``),
+``BatchedFederatedLoader`` runs B per-seed RNG streams in lockstep and
+stacks their draws on a leading (B,) axis — slice b is bit-identical to
+what a serial ``FederatedLoader(seed=seeds[b])`` would have produced, so
+the vmapped and serial training paths see the same data.
 """
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from typing import Iterator, Sequence, Tuple
 
 import numpy as np
 
@@ -44,3 +50,44 @@ class FederatedLoader:
     def __iter__(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
         while True:
             yield self.next_round()
+
+
+class BatchedFederatedLoader:
+    """B per-seed ``FederatedLoader`` streams advancing in lockstep.
+
+    The input format of the batched FL engine: ``next_rounds(r)`` returns
+    ``(x (B, R, M, E, Bsz, ...), y (B, R, M, E, Bsz))`` where slice ``b``
+    reproduces the *identical* RNG stream as a standalone
+    ``FederatedLoader(..., seed=seeds[b])`` drawing ``r`` rounds — the
+    guarantee that makes the vmapped ``simulate_fl_batch`` path
+    deterministic with respect to the per-seed serial baseline (guarded by
+    a regression test in ``tests/test_fl_round.py``).
+    """
+
+    def __init__(
+        self,
+        client_x: np.ndarray,       # (M, n, ...)
+        client_y: np.ndarray,       # (M, n)
+        batch_size: int,
+        local_epochs: int = 1,
+        seeds: Sequence[int] = (0,),
+    ):
+        self.loaders = [
+            FederatedLoader(client_x, client_y, batch_size, local_epochs, seed=s)
+            for s in seeds
+        ]
+        self.seeds = tuple(seeds)
+
+    @property
+    def n_seeds(self) -> int:
+        return len(self.loaders)
+
+    def next_round(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(x (B, M, E, Bsz, ...), y (B, M, E, Bsz)) — one round per seed."""
+        xs, ys = zip(*(ld.next_round() for ld in self.loaders))
+        return np.stack(xs), np.stack(ys)
+
+    def next_rounds(self, r: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(x (B, R, M, E, Bsz, ...), y (B, R, M, E, Bsz)) — R rounds per seed."""
+        xs, ys = zip(*(ld.next_rounds(r) for ld in self.loaders))
+        return np.stack(xs), np.stack(ys)

@@ -92,6 +92,19 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             t=jnp.zeros((), jnp.int32),
         )
 
+    def init_batch(
+        self, params: Any, keys: jax.Array, params_axis: int | None = None
+    ) -> AsyncFLState:
+        """Stack B independent init states — the input format of the batched
+        FL engine (``repro.sim.simulate_fl_batch``).
+
+        ``keys`` carries a leading (B,) axis of per-seed init keys; every leaf
+        of the returned state gains the same leading (B,) axis.  ``params`` is
+        broadcast to all batch entries by default; pass ``params_axis=0`` for
+        per-seed initial models (leaves pre-stacked on a leading axis).
+        """
+        return jax.vmap(self.init, in_axes=(params_axis, 0))(params, keys)
+
     # ------------------------------------------------------------------ round
     def _round_impl(
         self,
@@ -196,17 +209,37 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
 
         return jax.lax.scan(step, state, (batches_x, batches_y, keys))
 
+    def _run_vmapped(self, states, batches_x, batches_y, keys):
+        """Seed-batched round scan: vmap of ``_run_impl`` over a leading axis.
+
+        This is the ONE program both entry points trace: ``run`` executes it
+        at batch 1 (axes added/stripped at the jit boundary) and
+        ``repro.sim.simulate_fl_batch`` at batch B.  Sharing the traced
+        computation is what makes batch-of-1 engine output *bitwise* equal
+        to the serial path: XLA is free to fuse a forward-loss reduction
+        differently for (M,) vs (1, M) operands (observed: 1-ulp drift in
+        the ``local_loss`` metric), so the serial path must lower the
+        batched shapes too, not just the same Python code.
+        """
+        return jax.vmap(self._run_impl)(states, batches_x, batches_y, keys)
+
     # Two jitted variants: the donated one reuses the carried state's buffers
     # in place (the (M, P) update matrix dominates memory), but XLA:CPU does
     # not implement donation and would warn on every compile — so `run`
     # donates only where donation exists.
     @functools.partial(jax.jit, static_argnames=("self",), donate_argnums=(1,))
     def _run_donated(self, state, batches_x, batches_y, keys):
-        return self._run_impl(state, batches_x, batches_y, keys)
+        return self._run_batch1(state, batches_x, batches_y, keys)
 
     @functools.partial(jax.jit, static_argnames=("self",))
     def _run_plain(self, state, batches_x, batches_y, keys):
-        return self._run_impl(state, batches_x, batches_y, keys)
+        return self._run_batch1(state, batches_x, batches_y, keys)
+
+    def _run_batch1(self, state, batches_x, batches_y, keys):
+        lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+        out = self._run_vmapped(lift(state), batches_x[None], batches_y[None],
+                                keys[None])
+        return jax.tree_util.tree_map(lambda x: x[0], out)
 
     def run(
         self,

@@ -56,9 +56,37 @@ def glr_scan(
     raise ValueError(f"glr_scan: unknown backend {backend!r}; use one of {_GLR_BACKENDS}")
 
 
-def weighted_aggregate(updates: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    """Eq. 7 fused masked aggregation.  updates (M, P), scale (M,) -> (P,) f32."""
-    return _wa.weighted_aggregate(updates, scale, interpret=_interpret())
+_WA_BACKENDS = ("pallas", "pallas_interpret", "jnp")
+
+
+def weighted_aggregate(
+    updates: jnp.ndarray, scale: jnp.ndarray, backend: str | None = None
+) -> jnp.ndarray:
+    """Eq. 7 fused masked aggregation.  updates (M, P), scale (M,) -> (P,) f32.
+
+    Runs inside every round of the scan-fused FL trainer, so the dispatch
+    follows the same policy as ``glr_scan``: Pallas interpret mode is never
+    auto-selected on the hot path.  On CPU this matters twice over — the
+    interpret-mode kernel is a Python-built emulation, and its ``vmap``
+    lowering under the batched FL engine (``repro.sim.simulate_fl_batch``)
+    devolves into per-batch-element emulated grids (measured ~150x slower
+    than the serial jnp path at batch 8).  Backends:
+
+      None               auto: "pallas" on TPU, "jnp" elsewhere
+      "pallas"           compiled Pallas kernel (interpret mode off-TPU)
+      "pallas_interpret" Pallas kernel forced into interpret mode (tests)
+      "jnp"              the pure-jnp oracle in ``repro.kernels.ref``
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return ref.weighted_aggregate(updates, scale)
+    if backend == "pallas":
+        return _wa.weighted_aggregate(updates, scale, interpret=_interpret())
+    if backend == "pallas_interpret":
+        return _wa.weighted_aggregate(updates, scale, interpret=True)
+    raise ValueError(
+        f"weighted_aggregate: unknown backend {backend!r}; use one of {_WA_BACKENDS}")
 
 
 def flash_attention(

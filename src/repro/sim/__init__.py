@@ -2,15 +2,26 @@
 
 Public API:
   simulate_aoi_regret_batch  vmapped regret simulation over envs x seeds
-  SweepCase / sweep          heterogeneous sweep driver (vmappable buckets)
+  simulate_fl_batch          vmapped AsyncFLTrainer.run over stacked seeds
+  SweepCase / FLSweepCase    heterogeneous sweep requests (regret / FL)
+  sweep                      sweep driver (vmappable buckets, mixed cases)
   group_cases                bucket partitioning (exposed for tests)
 """
 from repro.sim.engine import simulate_aoi_regret_batch
-from repro.sim.sweep import BucketReport, SweepCase, group_cases, sweep
+from repro.sim.fl_batch import simulate_fl_batch
+from repro.sim.sweep import (
+    BucketReport,
+    FLSweepCase,
+    SweepCase,
+    group_cases,
+    sweep,
+)
 
 __all__ = [
     "simulate_aoi_regret_batch",
+    "simulate_fl_batch",
     "SweepCase",
+    "FLSweepCase",
     "BucketReport",
     "group_cases",
     "sweep",

@@ -1,0 +1,87 @@
+"""Batched, device-resident FL training (the `repro.sim` FL engine).
+
+``AsyncFLTrainer.run`` fuses R federated rounds into one ``lax.scan``, but
+the paper's Fig. 3/4 claims (faster convergence, fairer aggregation under
+GLR-CUCB / M-exp3 scheduling) are Monte-Carlo statements: mean ± std over
+seeds.  Run serially, each seed pays XLA dispatch for a scan whose inner
+ops are tiny (M ≈ 4–20 clients on a small model).
+
+``simulate_fl_batch`` turns the whole seed sweep into ONE XLA program by
+``vmap``-ing the *unjitted* round-scan core (``AsyncFLTrainer._run_impl``)
+over
+
+* a stacked ``AsyncFLState`` (from ``AsyncFLTrainer.init_batch`` — every
+  leaf carries a leading (B,) axis; state is a pytree, so the whole FL
+  round vmaps with zero trainer changes — the same trick as
+  ``simulate_aoi_regret_batch``),
+* (B, R, ...) per-seed round data (``BatchedFederatedLoader.next_rounds``
+  stacks per-seed streams bit-identical to serial draws), and
+* (B, R) per-round PRNG keys,
+
+with broadcast supported on data and keys (one data stream or one key
+sequence shared across all seeds).  The scheduler/env/model *configuration*
+lives in the trainer, which is a static argument: one compiled program per
+trainer, and the ``sweep`` driver buckets FL cases by trainer so
+heterogeneous comparisons (e.g. GLR-CUCB vs the related-work baselines)
+compile once per policy.
+
+Batch-of-1 engine output matches ``AsyncFLTrainer.run`` **bitwise**: both
+entry points execute ``AsyncFLTrainer._run_vmapped`` — ``run`` at batch 1,
+the engine at batch B — so at B = 1 the two lower the *identical* HLO
+program.  (Sharing only the Python code would not suffice: XLA fuses a
+forward-loss reduction differently for (M,) vs (1, M) operands, a 1-ulp
+drift in the ``local_loss`` metric.)  Asserted in
+``tests/test_sim_engine.py`` and re-checked by ``benchmarks/run.py`` at
+every run.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+
+
+@partial(jax.jit, static_argnames=("trainer", "data_axis", "key_axis"))
+def simulate_fl_batch(
+    trainer,
+    states,
+    batches_x,
+    batches_y,
+    keys: jax.Array,
+    data_axis: int | None = 0,
+    key_axis: int | None = 0,
+) -> Tuple[Any, Dict[str, jax.Array]]:
+    """Vmapped ``AsyncFLTrainer.run`` over stacked seeds.
+
+    Parameters
+    ----------
+    trainer:    an ``AsyncFLTrainer`` (static — one compiled program per
+                trainer instance; bucket heterogeneous trainers with
+                ``repro.sim.sweep``).
+    states:     a batched ``AsyncFLState`` whose leaves carry a leading
+                (B,) axis, from ``trainer.init_batch(params, init_keys)``.
+    batches_x:  (B, R, M, E, Bsz, ...) per-seed round data, or (R, M, ...)
+                with ``data_axis=None`` to share one stream across seeds.
+    batches_y:  (B, R, M, E, Bsz) labels, batched like ``batches_x``.
+    keys:       (B, R) per-round PRNG keys, or (R,) with ``key_axis=None``
+                to share the round-key sequence across the batch.
+    data_axis / key_axis: 0 to map over the leading axis, None to
+                broadcast.  The state batch is always mapped.
+
+    Returns ``(final_states, metrics)`` exactly like ``AsyncFLTrainer.run``
+    with every leaf gaining a leading (B,) axis — metrics are (B, R) and
+    stay device-resident; nothing syncs to the host until the caller reads
+    a value.
+    """
+
+    if data_axis == 0 and key_axis == 0:
+        # the exact program `run` executes at batch 1 — bitwise parity path
+        return trainer._run_vmapped(states, batches_x, batches_y, keys)
+
+    def one(state, bx, by, ks):
+        return trainer._run_impl(state, bx, by, ks)
+
+    return jax.vmap(one, in_axes=(0, data_axis, data_axis, key_axis))(
+        states, batches_x, batches_y, keys
+    )

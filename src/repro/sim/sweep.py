@@ -9,6 +9,13 @@ per-case results keyed by case name.
 Scheduler configs are frozen dataclasses (hashable, compared by value), so
 two cases with "the same" scheduler built twice still land in one bucket
 and share one executable.
+
+FL cases (``FLSweepCase``) ride the same driver: a mixed case list is
+bucketed with regret cases side by side, and each FL bucket executes as one
+``simulate_fl_batch`` program (vmap over seeds).  ``AsyncFLTrainer`` hashes
+by *identity* (its env holds arrays), so FL cases share a bucket only when
+they share the same trainer instance — build one trainer per policy and
+fan the seeds out as cases.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.channels import ChannelEnv, stack_envs
 from repro.sim.engine import simulate_aoi_regret_batch
+from repro.sim.fl_batch import simulate_fl_batch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +42,26 @@ class SweepCase:
     horizon: int
 
 
+@dataclasses.dataclass(frozen=True)
+class FLSweepCase:
+    """One (name, trainer, params, init_key, round data, round keys) FL run.
+
+    ``trainer`` is an ``AsyncFLTrainer``; cases sharing the same trainer
+    *instance* and data shapes batch into one vmapped program (one entry
+    per seed: fold the seed into ``init_key``/``round_keys`` and draw
+    ``batches_*`` from a per-seed loader).  The sweep result for an FL case
+    is ``{"state": final AsyncFLState, "metrics": {name: (R,) array}}``.
+    """
+
+    name: str
+    trainer: Any
+    params: Any
+    init_key: jax.Array
+    batches_x: Any               # (R, M, E, B, ...) per-round client data
+    batches_y: Any               # (R, M, E, B)
+    round_keys: jax.Array        # (R,)
+
+
 @dataclasses.dataclass
 class BucketReport:
     """Execution record for one vmappable bucket (for BENCH_sim.json)."""
@@ -44,15 +72,22 @@ class BucketReport:
     wall_s: float
 
 
-def _bucket_key(case: SweepCase):
-    leaves, treedef = jax.tree_util.tree_flatten(case.env)
-    shapes = tuple((tuple(l.shape), str(l.dtype)) for l in leaves)
-    return (case.scheduler, case.horizon, treedef, shapes)
+def _tree_sig(tree) -> Tuple:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple((tuple(jnp.shape(l)), str(jnp.result_type(l))) for l in leaves)
+    return (treedef, shapes)
 
 
-def group_cases(cases: Sequence[SweepCase]) -> List[List[SweepCase]]:
+def _bucket_key(case):
+    if isinstance(case, FLSweepCase):
+        return ("fl", case.trainer, _tree_sig(case.params),
+                _tree_sig((case.batches_x, case.batches_y, case.round_keys)))
+    return ("regret", case.scheduler, case.horizon, _tree_sig(case.env))
+
+
+def group_cases(cases: Sequence[Any]) -> List[List[Any]]:
     """Partition cases into vmappable buckets, preserving first-seen order."""
-    buckets: Dict[Any, List[SweepCase]] = {}
+    buckets: Dict[Any, List[Any]] = {}
     order = []
     for c in cases:
         k = _bucket_key(c)
@@ -63,16 +98,71 @@ def group_cases(cases: Sequence[SweepCase]) -> List[List[SweepCase]]:
     return [buckets[k] for k in order]
 
 
+def _run_regret_bucket(bucket, collect_curve: bool, block: bool):
+    envs = stack_envs([c.env for c in bucket])
+    keys = jnp.stack([c.key for c in bucket])
+    sched, horizon = bucket[0].scheduler, bucket[0].horizon
+
+    t0 = time.perf_counter()
+    if block:
+        # AOT-compile to separate compile_s from wall_s without paying a
+        # throwaway warm-up execution of the whole bucket
+        compiled = simulate_aoi_regret_batch.lower(
+            sched, envs, keys, horizon, collect_curve=collect_curve
+        ).compile()
+        compile_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        out = compiled(envs, keys)
+        jax.block_until_ready(out)
+        wall_s = time.perf_counter() - t1
+    else:
+        out = simulate_aoi_regret_batch(
+            sched, envs, keys, horizon, collect_curve=collect_curve)
+        compile_s = wall_s = time.perf_counter() - t0
+    return out, compile_s, wall_s
+
+
+def _run_fl_bucket(bucket, block: bool):
+    tr = bucket[0].trainer
+    params = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
+        *[c.params for c in bucket])
+    states = tr.init_batch(
+        params, jnp.stack([c.init_key for c in bucket]), params_axis=0)
+    bx = jnp.stack([jnp.asarray(c.batches_x) for c in bucket])
+    by = jnp.stack([jnp.asarray(c.batches_y) for c in bucket])
+    rkeys = jnp.stack([c.round_keys for c in bucket])
+
+    t0 = time.perf_counter()
+    if block:
+        compiled = simulate_fl_batch.lower(tr, states, bx, by, rkeys).compile()
+        compile_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        out = compiled(states, bx, by, rkeys)
+        jax.block_until_ready(out)
+        wall_s = time.perf_counter() - t1
+    else:
+        out = simulate_fl_batch(tr, states, bx, by, rkeys)
+        compile_s = wall_s = time.perf_counter() - t0
+    final_states, metrics = out
+    return {"state": final_states, "metrics": metrics}, compile_s, wall_s
+
+
 def sweep(
-    cases: Sequence[SweepCase],
+    cases: Sequence[Any],
     collect_curve: bool = True,
     block: bool = True,
-) -> Tuple[Dict[str, Dict[str, jnp.ndarray]], List[BucketReport]]:
+) -> Tuple[Dict[str, Dict[str, Any]], List[BucketReport]]:
     """Run every case, batching compatible ones into single XLA programs.
 
+    ``cases`` may mix ``SweepCase`` (regret) and ``FLSweepCase`` (federated
+    training) entries; each bucket is homogeneous and executes through the
+    matching engine (``simulate_aoi_regret_batch`` / ``simulate_fl_batch``).
+
     Returns ``(results, report)``:
-      results: case name -> the ``simulate_aoi_regret`` result dict for that
-               case (batch axis already stripped).
+      results: case name -> the ``simulate_aoi_regret`` result dict (regret
+               cases) or ``{"state": AsyncFLState, "metrics": {k: (R,)}}``
+               (FL cases), batch axis already stripped.
       report:  one ``BucketReport`` per executed bucket: ``compile_s`` from
                an AOT lower+compile, ``wall_s`` the blocked execution time.
                ``block=False`` skips AOT and blocking for latency-insensitive
@@ -83,29 +173,14 @@ def sweep(
     if len(set(names)) != len(names):
         raise ValueError(f"sweep: duplicate case names: {names}")
 
-    results: Dict[str, Dict[str, jnp.ndarray]] = {}
+    results: Dict[str, Dict[str, Any]] = {}
     report: List[BucketReport] = []
     for bucket in group_cases(cases):
-        envs = stack_envs([c.env for c in bucket])
-        keys = jnp.stack([c.key for c in bucket])
-        sched, horizon = bucket[0].scheduler, bucket[0].horizon
-
-        t0 = time.perf_counter()
-        if block:
-            # AOT-compile to separate compile_s from wall_s without paying a
-            # throwaway warm-up execution of the whole bucket
-            compiled = simulate_aoi_regret_batch.lower(
-                sched, envs, keys, horizon, collect_curve=collect_curve
-            ).compile()
-            compile_s = time.perf_counter() - t0
-            t1 = time.perf_counter()
-            out = compiled(envs, keys)
-            jax.block_until_ready(out)
-            wall_s = time.perf_counter() - t1
+        if isinstance(bucket[0], FLSweepCase):
+            out, compile_s, wall_s = _run_fl_bucket(bucket, block)
         else:
-            out = simulate_aoi_regret_batch(
-                sched, envs, keys, horizon, collect_curve=collect_curve)
-            compile_s = wall_s = time.perf_counter() - t0
+            out, compile_s, wall_s = _run_regret_bucket(
+                bucket, collect_curve, block)
 
         for i, c in enumerate(bucket):
             results[c.name] = jax.tree_util.tree_map(lambda x, i=i: x[i], out)

@@ -209,3 +209,28 @@ def test_loader_next_rounds_matches_sequential_draws(setup):
         x1, y1 = b.next_round()
         np.testing.assert_array_equal(xs[t], x1)
         np.testing.assert_array_equal(ys[t], y1)
+
+
+def test_batched_loader_reproduces_per_seed_serial_streams():
+    """BatchedFederatedLoader's stacked (B, R, ...) batches must be
+    bit-identical to per-seed serial FederatedLoader draws — the determinism
+    guard for the vmapped FL path (repro.sim.simulate_fl_batch)."""
+    from repro.data import BatchedFederatedLoader, FederatedLoader
+    cx = np.arange(3 * 24 * 4, dtype=np.float32).reshape(3, 24, 4)
+    cy = np.arange(3 * 24).reshape(3, 24) % 10
+    seeds = [3, 11, 42]
+    bl = BatchedFederatedLoader(cx, cy, batch_size=8, local_epochs=2,
+                                seeds=seeds)
+    assert bl.n_seeds == len(seeds)
+    xs, ys = bl.next_rounds(3)
+    assert xs.shape[:2] == (len(seeds), 3)
+    x1, y1 = bl.next_round()               # the stream continues past the stack
+    for b, s in enumerate(seeds):
+        serial = FederatedLoader(cx, cy, batch_size=8, local_epochs=2, seed=s)
+        for t in range(3):
+            sx, sy = serial.next_round()
+            np.testing.assert_array_equal(xs[b, t], sx)
+            np.testing.assert_array_equal(ys[b, t], sy)
+        sx, sy = serial.next_round()       # round 4: continuation also aligned
+        np.testing.assert_array_equal(x1[b], sx)
+        np.testing.assert_array_equal(y1[b], sy)

@@ -1,20 +1,34 @@
 """Batched simulation engine (`repro.sim`): batch-vs-serial equivalence,
-env stacking rules, and heterogeneous sweep bucketing."""
+env stacking rules, heterogeneous sweep bucketing, and the batched FL path."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.bandits import GLRCUCB, MExp3, RandomScheduler
+from repro.core.bandits import (
+    ChannelAwareAsync,
+    GLRCUCB,
+    LyapunovSched,
+    MExp3,
+    RandomScheduler,
+)
 from repro.core.channels import (
     env_batch_size,
+    make_piecewise,
     make_stationary,
     random_adversarial_env,
     random_piecewise_env,
     stack_envs,
 )
 from repro.core.regret import simulate_aoi_regret
-from repro.sim import SweepCase, group_cases, simulate_aoi_regret_batch, sweep
+from repro.sim import (
+    FLSweepCase,
+    SweepCase,
+    group_cases,
+    simulate_aoi_regret_batch,
+    simulate_fl_batch,
+    sweep,
+)
 
 KEY = jax.random.PRNGKey(0)
 T = 600
@@ -30,6 +44,8 @@ T = 600
     (MExp3(5, 2, share_alpha=1e-3),
      lambda: random_adversarial_env(KEY, 5, T, flip_prob=0.01)),
     (RandomScheduler(5, 2), lambda: make_stationary(jnp.linspace(0.9, 0.1, 5))),
+    (ChannelAwareAsync(5, 2), lambda: random_piecewise_env(KEY, 5, T, 3)),
+    (LyapunovSched(5, 2), lambda: random_piecewise_env(KEY, 5, T, 3)),
 ])
 def test_batch1_bitwise_matches_serial(sched, env_fn):
     env = env_fn()
@@ -163,3 +179,189 @@ def test_identical_scheduler_configs_share_bucket():
                   jax.random.fold_in(KEY, 4), T),
     ]
     assert [len(b) for b in group_cases(cases)] == [2]
+
+
+# ---------------------------------------------------------------------------
+# batched FL engine (simulate_fl_batch)
+# ---------------------------------------------------------------------------
+
+M_FL, N_FL, R_FL = 4, 6, 6
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    from repro.data import BatchedFederatedLoader, make_federated_classification
+    from repro.fl import AsyncFLConfig, AsyncFLTrainer
+
+    cx, cy, *_ = make_federated_classification(
+        M_FL, samples_per_client=64, dim=16, alpha=0.3)
+    k1, k2 = jax.random.split(KEY)
+    params = {"w1": jax.random.normal(k1, (16, 32)) * 0.2, "b1": jnp.zeros(32),
+              "w2": jax.random.normal(k2, (32, 10)) * 0.2, "b2": jnp.zeros(10)}
+
+    def loss(p, x, y):
+        lg = jax.nn.log_softmax(jax.nn.relu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"])
+        return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
+
+    def make_trainer(sched=None):
+        cfg = AsyncFLConfig(n_clients=M_FL, n_channels=N_FL, local_epochs=2,
+                            client_lr=0.1, server_lr=0.1)
+        env = make_stationary(jnp.linspace(0.9, 0.2, N_FL))
+        return AsyncFLTrainer(cfg, sched or GLRCUCB(N_FL, M_FL, history=32),
+                              env, loss)
+
+    def make_batches(seeds, r=R_FL):
+        bl = BatchedFederatedLoader(cx, cy, batch_size=8, local_epochs=2,
+                                    seeds=seeds)
+        bx, by = bl.next_rounds(r)
+        return jnp.asarray(bx), jnp.asarray(by)
+
+    return make_trainer, make_batches, params
+
+
+def _round_keys(r, tag=0):
+    return jnp.stack([jax.random.fold_in(KEY, 1000 * tag + t) for t in range(r)])
+
+
+def test_fl_batch1_bitwise_matches_serial_run(fl_setup):
+    """Batch-of-1 simulate_fl_batch output is bitwise identical to the serial
+    AsyncFLTrainer.run (mirrors the regret-engine parity guarantee)."""
+    make_trainer, make_batches, params = fl_setup
+    tr = make_trainer()
+    bx, by = make_batches([0])
+    keys = _round_keys(R_FL)
+
+    st_serial, mets_serial = tr.run(tr.init(params, KEY), bx[0], by[0], keys)
+    states = tr.init_batch(params, jnp.stack([KEY]))
+    st_b, mets_b = simulate_fl_batch(tr, states, bx, by, keys[None])
+
+    for a, b in zip(jax.tree_util.tree_leaves(st_serial),
+                    jax.tree_util.tree_leaves(st_b)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[0]))
+    for k in mets_serial:
+        np.testing.assert_array_equal(
+            np.asarray(mets_serial[k]), np.asarray(mets_b[k][0]), err_msg=k)
+
+
+def test_fl_batch_multi_seed_matches_per_seed_serial(fl_setup):
+    make_trainer, make_batches, params = fl_setup
+    tr = make_trainer()
+    seeds = [0, 7, 23]
+    bx, by = make_batches(seeds)
+    init_keys = jnp.stack([jax.random.fold_in(KEY, 10 + i)
+                           for i in range(len(seeds))])
+    rkeys = jnp.stack([_round_keys(R_FL, tag=i) for i in range(len(seeds))])
+
+    states = tr.init_batch(params, init_keys)
+    st_b, mets_b = simulate_fl_batch(tr, states, bx, by, rkeys)
+
+    for i in range(len(seeds)):
+        st_s, mets_s = tr.run(
+            tr.init(params, init_keys[i]), bx[i], by[i], rkeys[i])
+        for a, b in zip(jax.tree_util.tree_leaves(st_s),
+                        jax.tree_util.tree_leaves(st_b)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b[i]), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(mets_s["mean_aoi"]), np.asarray(mets_b["mean_aoi"][i]),
+            rtol=1e-6)
+
+
+def test_fl_batch_broadcasts_data_over_seeds(fl_setup):
+    """One data stream shared across B seeds (data_axis=None), per-seed round
+    keys mapped — the 'one dataset x many seeds' Fig. 3/4 error-bar setup."""
+    make_trainer, make_batches, params = fl_setup
+    tr = make_trainer()
+    b = 3
+    bx, by = make_batches([0])            # single stream, no leading B axis
+    rkeys = jnp.stack([_round_keys(R_FL, tag=i) for i in range(b)])
+    init_keys = jnp.stack([jax.random.fold_in(KEY, i) for i in range(b)])
+
+    states = tr.init_batch(params, init_keys)
+    st_b, mets_b = simulate_fl_batch(
+        tr, states, bx[0], by[0], rkeys, data_axis=None)
+
+    assert mets_b["mean_aoi"].shape == (b, R_FL)
+    assert int(st_b.t[0]) == R_FL
+    # per-seed round keys -> different channel draws -> different trajectories
+    aoi = np.asarray(mets_b["mean_aoi"])
+    assert not np.array_equal(aoi[0], aoi[1]) or not np.array_equal(aoi[0], aoi[2])
+    # broadcasting the shared stream must equal explicitly tiling it
+    bx3 = jnp.broadcast_to(bx, (b,) + bx.shape[1:])
+    by3 = jnp.broadcast_to(by, (b,) + by.shape[1:])
+    st_t, mets_t = simulate_fl_batch(tr, states, bx3, by3, rkeys)
+    np.testing.assert_array_equal(
+        np.asarray(mets_b["mean_aoi"]), np.asarray(mets_t["mean_aoi"]))
+
+
+def test_sweep_buckets_fl_cases_alongside_regret(fl_setup):
+    """A mixed sweep: FL cases bucket per shared trainer instance, regret
+    cases bucket as before, and every FL result matches its serial run."""
+    make_trainer, make_batches, params = fl_setup
+    tr_a = make_trainer()
+    tr_b = make_trainer(RandomScheduler(N_FL, M_FL))
+    bx, by = make_batches([0, 7])
+    rkeys = jnp.stack([_round_keys(R_FL, tag=i) for i in range(2)])
+    env = make_stationary(jnp.linspace(0.9, 0.1, 5))
+
+    cases = [
+        FLSweepCase("fl-a0", tr_a, params, KEY, bx[0], by[0], rkeys[0]),
+        FLSweepCase("fl-a1", tr_a, params, jax.random.fold_in(KEY, 1),
+                    bx[1], by[1], rkeys[1]),
+        FLSweepCase("fl-b0", tr_b, params, KEY, bx[0], by[0], rkeys[0]),
+        SweepCase("regret-0", RandomScheduler(5, 2), env, KEY, 200),
+        SweepCase("regret-1", RandomScheduler(5, 2), env,
+                  jax.random.fold_in(KEY, 2), 200),
+    ]
+    assert sorted(len(b) for b in group_cases(cases)) == [1, 2, 2]
+
+    results, report = sweep(cases)
+    assert set(results) == {"fl-a0", "fl-a1", "fl-b0", "regret-0", "regret-1"}
+    assert sum(b.batch for b in report) == 5
+
+    # FL sweep results must reproduce the serial path per case
+    for name, tr, i, ik in [("fl-a0", tr_a, 0, KEY),
+                            ("fl-a1", tr_a, 1, jax.random.fold_in(KEY, 1)),
+                            ("fl-b0", tr_b, 0, KEY)]:
+        st_s, mets_s = tr.run(tr.init(params, ik), bx[i], by[i], rkeys[i])
+        got = results[name]
+        np.testing.assert_allclose(
+            np.asarray(got["metrics"]["mean_aoi"]),
+            np.asarray(mets_s["mean_aoi"]), rtol=1e-6, err_msg=name)
+        for a, b in zip(jax.tree_util.tree_leaves(st_s),
+                        jax.tree_util.tree_leaves(got["state"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-6, err_msg=name)
+    # and regret results the serial regret path
+    want = simulate_aoi_regret(RandomScheduler(5, 2), env, KEY, 200)
+    np.testing.assert_allclose(
+        float(results["regret-0"]["final_regret"]),
+        float(want["final_regret"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# statistical sanity: the paper's ordering must hold in the mean over seeds
+# ---------------------------------------------------------------------------
+
+def test_glr_cucb_mean_regret_beats_random_over_seeds():
+    """Over 8 seeds on a controlled piecewise-stationary env, GLR-CUCB's mean
+    AoI regret must not exceed the random policy's (tolerance-based; the
+    controlled rotating-profile env avoids breakpoint-placement flakiness,
+    the same de-flake pattern as test_sublinear_regret_growth)."""
+    horizon, n_seeds = 3000, 8
+    profile = jnp.array([0.9, 0.7, 0.5, 0.3, 0.1])
+    means = jnp.stack([jnp.roll(profile, s) for s in range(3)])
+    env = make_piecewise(means, jnp.array([1000, 2000]))
+    keys = jnp.stack([jax.random.fold_in(KEY, i) for i in range(n_seeds)])
+
+    glr = simulate_aoi_regret_batch(
+        GLRCUCB(5, 2, history=256, detector_stride=4), env, keys, horizon,
+        collect_curve=False, env_axis=None)
+    rnd = simulate_aoi_regret_batch(
+        RandomScheduler(5, 2), env, keys, horizon,
+        collect_curve=False, env_axis=None)
+    glr_mean = float(jnp.mean(glr["final_regret"]))
+    rnd_mean = float(jnp.mean(rnd["final_regret"]))
+    # mean over 8 seeds is stable; 0.9 leaves headroom without weakening the
+    # claim (single-seed runs show ~0.5x)
+    assert glr_mean <= 0.9 * rnd_mean, (glr_mean, rnd_mean)
