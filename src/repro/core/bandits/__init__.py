@@ -14,8 +14,20 @@ matcher, and the batched ``repro.sim`` engines unchanged.  Protocol
 invariants (M distinct valid channels from ``select``, structure/dtype
 preservation in ``update``, finite (N,) ``channel_scores``) are enforced
 for ALL policies by ``tests/test_scheduler_properties.py``.
+
+Scalar tuning knobs (``gamma``, ``delta``, EMA rates, Lyapunov ``v``, ...)
+are *traced* hyper-parameters (``TracedHyperParams``): they ride the state
+pytree instead of the config hash, so a tuning grid vmaps through one
+compiled program per policy family — see ``base.py`` and
+``repro.sim`` (``hparams``/``hp_axis``, sweep bucket merging).
 """
-from repro.core.bandits.base import Scheduler, combinations_array
+from repro.core.bandits.base import (
+    Scheduler,
+    TracedHyperParams,
+    combinations_array,
+    init_with_hp,
+    stack_params,
+)
 from repro.core.bandits.mexp3 import MExp3
 from repro.core.bandits.glr_cucb import GLRCUCB, glr_statistic, bernoulli_kl
 from repro.core.bandits.aoi_aware import AoIAware
@@ -27,6 +39,9 @@ from repro.core.bandits.oracle import oracle_assign
 
 __all__ = [
     "Scheduler",
+    "TracedHyperParams",
+    "init_with_hp",
+    "stack_params",
     "combinations_array",
     "MExp3",
     "GLRCUCB",

@@ -13,10 +13,12 @@ updated in both branches so exploration statistics stay consistent.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams, init_with_hp
 
 
 class AoIAwareState(NamedTuple):
@@ -24,16 +26,26 @@ class AoIAwareState(NamedTuple):
     mu_sum: jnp.ndarray    # (N,) discounted reward sums (wrapper's own
     pulls: jnp.ndarray     # (N,) discounted pull counts  bookkeeping, survives
     exploit_rounds: jnp.ndarray  # base restarts); scalar — AA-branch firings
+    hp: Any                # traced hyper-parameters {threshold_scale, discount}
 
 
 @dataclasses.dataclass(frozen=True)
-class AoIAware:
+class AoIAware(TracedHyperParams):
     base: Any                      # the wrapped Scheduler
     threshold_scale: float = 1.0   # h(t) = scale / max mu_hat
     discount: float = 0.9        # recency discounting of the historical means:
                                    # under non-stationary channels an all-history
                                    # mean goes stale and the exploitation branch
                                    # can dead-lock onto a dead channel
+
+    TRACED = ("threshold_scale", "discount")
+
+    def params(self) -> Dict[str, Any]:
+        """Wrapper knobs plus the wrapped policy's params nested under "base"."""
+        hp = super().params()
+        if hasattr(self.base, "params"):
+            hp["base"] = self.base.params()
+        return hp
 
     @property
     def n_channels(self) -> int:
@@ -48,13 +60,15 @@ class AoIAware:
         return f"aa-{self.base.name}"
 
     # ------------------------------------------------------------------ api
-    def init(self, key: jax.Array) -> AoIAwareState:
+    def init(self, key: jax.Array, hp: Optional[Dict[str, Any]] = None) -> AoIAwareState:
         n = self.n_channels
+        hp = self.params() if hp is None else dict(hp)
         return AoIAwareState(
-            base=self.base.init(key),
+            base=init_with_hp(self.base, key, hp.pop("base", None)),
             mu_sum=jnp.zeros((n,), jnp.float32),
             pulls=jnp.zeros((n,), jnp.float32),
             exploit_rounds=jnp.zeros((), jnp.int32),
+            hp=hp,
         )
 
     def _mu_hat(self, state: AoIAwareState) -> jnp.ndarray:
@@ -65,7 +79,7 @@ class AoIAware:
     ) -> Tuple[jnp.ndarray, Any]:
         m = self.n_clients
         mu_hat = self._mu_hat(state)
-        h_t = self.threshold_scale / jnp.maximum(jnp.max(mu_hat), 1e-6)
+        h_t = state.hp["threshold_scale"] / jnp.maximum(jnp.max(mu_hat), 1e-6)
         exploit = jnp.max(aoi) > h_t
 
         base_channels, base_aux = self.base.select(state.base, t, key, aoi)
@@ -94,7 +108,7 @@ class AoIAware:
         # Feed observations to the base policy regardless of which branch
         # chose them (semi-bandit feedback is policy-agnostic).
         new_base = self.base.update(state.base, t, channels, rewards, base_aux)
-        rho = self.discount
+        rho = state.hp["discount"]
         sched = jnp.zeros_like(state.pulls).at[channels].set(1.0)
         r_vec = jnp.zeros_like(state.mu_sum).at[channels].set(rewards)
         mu_sum = rho * state.mu_sum + r_vec
@@ -104,6 +118,7 @@ class AoIAware:
             mu_sum=mu_sum,
             pulls=pulls,
             exploit_rounds=state.exploit_rounds + exploited.astype(jnp.int32),
+            hp=state.hp,
         )
 
     def channel_scores(self, state: AoIAwareState, t: jnp.ndarray) -> jnp.ndarray:

@@ -12,12 +12,27 @@ round is jittable (the scheduler object itself is a static argument):
 
 ``rewards`` are the observed Good/Bad states of the scheduled channels
 (semi-bandit feedback), shape (M,) in {0, 1}.
+
+Traced hyper-parameters
+-----------------------
+A scheduler config splits into a *structural* part (array shapes, Python
+control flow: ``n_channels``, ``history``, ``detector_stride``, branch
+predicates) and scalar tuning knobs (``gamma``, ``delta``, EMA rates, ...)
+that only enter the numerics.  The ``TracedHyperParams`` mixin makes the
+scalar part **traced**: ``init`` stores the knobs as f32 scalars in the
+state pytree (``state.hp``) and ``select``/``update``/``channel_scores``
+read them from there, so the compiled program never specializes on their
+values.  A tuning grid then vmaps over stacked ``params()`` pytrees — one
+XLA program per policy *family* (= one ``hp_signature()``), not per grid
+point.  See ``repro.sim`` (``hparams``/``hp_axis``) and the sweep driver,
+which buckets cases by ``hp_signature()`` and merges cases differing only
+in traced scalars.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Protocol, Tuple
+from typing import Any, ClassVar, Dict, Optional, Protocol, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +44,7 @@ class Scheduler(Protocol):
     n_clients: int
     name: str
 
-    def init(self, key: jax.Array) -> Any: ...
+    def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> Any: ...
 
     def select(
         self, state: Any, t: jnp.ndarray, key: jax.Array, aoi: jnp.ndarray
@@ -45,6 +60,88 @@ class Scheduler(Protocol):
     ) -> Any: ...
 
     def channel_scores(self, state: Any, t: jnp.ndarray) -> jnp.ndarray: ...
+
+
+class TracedHyperParams:
+    """Mixin: the traced-scalar hyper-parameter convention.
+
+    A policy lists its tunable scalar fields in ``TRACED`` (or overrides
+    ``traced_fields()`` when the set depends on structural predicates, e.g.
+    a knob that also gates a Python branch).  The mixin then provides:
+
+      params()          field -> f32 scalar pytree of the *current* values;
+                        ``init(key, hp=...)`` consumes a (possibly traced /
+                        stacked) override of this pytree.
+      replace_traced()  dataclasses.replace restricted to traced fields —
+                        grid points built this way share one compiled
+                        program through the sweep driver.
+      hp_signature()    hashable structural identity: every non-traced
+                        field by value (recursing into wrapped schedulers),
+                        traced fields by *name only*.  Two configs with
+                        equal signatures lower the identical XLA program
+                        when their ``params()`` are fed as traced inputs.
+    """
+
+    TRACED: ClassVar[Tuple[str, ...]] = ()
+
+    def traced_fields(self) -> Tuple[str, ...]:
+        return self.TRACED
+
+    def params(self) -> Dict[str, jnp.ndarray]:
+        return {f: jnp.asarray(getattr(self, f), jnp.float32)
+                for f in self.traced_fields()}
+
+    def replace_traced(self, **vals):
+        unknown = set(vals) - set(self.traced_fields())
+        if unknown:
+            raise ValueError(
+                f"{type(self).__name__}.replace_traced: {sorted(unknown)} are "
+                f"not traced hyper-parameters (traced: {self.traced_fields()}); "
+                "structural fields need a new config (and a new compile)")
+        return dataclasses.replace(self, **vals)
+
+    def hp_signature(self) -> Tuple:
+        traced = set(self.traced_fields())
+        parts = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if f.name in traced:
+                parts.append((f.name, "<traced>"))
+            elif hasattr(v, "hp_signature"):
+                parts.append((f.name, v.hp_signature()))
+            else:
+                parts.append((f.name, v))
+        return (type(self).__name__, tuple(parts))
+
+
+def init_with_hp(sched, key: jax.Array, hp) -> Any:
+    """``sched.init`` with a traced hyper-parameter override when given.
+
+    ``hp=None`` — or an empty override, the shape a knob-free or legacy
+    (pre-``TracedHyperParams``) scheduler produces — calls the plain
+    ``init(key)``, so schedulers without the convention keep working
+    unchanged everywhere hp pytrees are threaded through.
+    """
+    if hp is None or (isinstance(hp, dict) and not hp):
+        return sched.init(key)
+    return sched.init(key, hp=hp)
+
+
+def stack_params(configs) -> Optional[Dict[str, jnp.ndarray]]:
+    """Stack each config's ``params()`` into the engines' ``hparams`` format.
+
+    Every traced scalar leaf gains a leading (G,) grid axis — the pytree
+    ``simulate_aoi_regret_batch(..., hparams=..., hp_axis=0)`` and
+    ``AsyncFLTrainer.init_batch(hp=..., hp_axis=0)`` consume.  Configs must
+    share one ``hp_signature()`` (same policy family).  Returns ``None``
+    for knob-free or legacy schedulers (no/empty ``params()``) — the
+    "nothing to vmap over" value the engines treat as absent.
+    """
+    plists = [getattr(c, "params", dict)() for c in configs]
+    if not plists[0]:
+        return None
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *plists)
 
 
 _MAX_SUPER_ARMS = 200_000

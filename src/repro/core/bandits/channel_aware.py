@@ -26,33 +26,40 @@ batched ``repro.sim`` engines with zero changes.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.bandits.base import TracedHyperParams
+
 
 class ChannelAwareState(NamedTuple):
     p_hat: jnp.ndarray      # (N,) EMA success-probability estimates
+    hp: Any                 # traced hyper-parameters {ema, explore_eps}
 
 
 @dataclasses.dataclass(frozen=True)
-class ChannelAwareAsync:
+class ChannelAwareAsync(TracedHyperParams):
     n_channels: int
     n_clients: int
     ema: float = 0.05           # EMA step for p̂ (recency over full history)
     explore_eps: float = 0.1    # uniform mixing floor (keeps all channels live)
     name: str = "channel-aware"
 
+    TRACED = ("ema", "explore_eps")
+
     # ------------------------------------------------------------------ api
-    def init(self, key: jax.Array) -> ChannelAwareState:
+    def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> ChannelAwareState:
         # optimistic-neutral start: every channel looks 50% good until
         # observed, so early rounds explore uniformly
         return ChannelAwareState(
-            p_hat=jnp.full((self.n_channels,), 0.5, jnp.float32))
+            p_hat=jnp.full((self.n_channels,), 0.5, jnp.float32),
+            hp=self.params() if hp is None else dict(hp))
 
     def _weights(self, state: ChannelAwareState) -> jnp.ndarray:
-        w = (1.0 - self.explore_eps) * state.p_hat + self.explore_eps / self.n_channels
+        eps = state.hp["explore_eps"]
+        w = (1.0 - eps) * state.p_hat + eps / self.n_channels
         return jnp.maximum(w, 1e-9)
 
     def select(
@@ -75,12 +82,13 @@ class ChannelAwareAsync:
     ) -> ChannelAwareState:
         sched = jnp.zeros((self.n_channels,), jnp.float32).at[channels].set(1.0)
         r_vec = jnp.zeros((self.n_channels,), jnp.float32).at[channels].set(rewards)
+        ema = state.hp["ema"]
         p_hat = jnp.where(
             sched > 0.5,
-            (1.0 - self.ema) * state.p_hat + self.ema * r_vec,
+            (1.0 - ema) * state.p_hat + ema * r_vec,
             state.p_hat,
         )
-        return ChannelAwareState(p_hat=p_hat)
+        return ChannelAwareState(p_hat=p_hat, hp=state.hp)
 
     def channel_scores(self, state: ChannelAwareState, t: jnp.ndarray) -> jnp.ndarray:
         """EMA success probabilities rank channels for the Sec.-V matcher."""

@@ -23,12 +23,12 @@ kept for tests and documentation.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bandits.base import rotate_assignment
+from repro.core.bandits.base import TracedHyperParams, rotate_assignment
 from repro.kernels import ops
 
 _EPS = 1e-6  # float32-safe: 1.0 - 1e-9 rounds to 1.0 and poisons KL with 0*log(0)
@@ -64,7 +64,7 @@ def glr_statistic(history: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
     return jnp.max(jnp.where(valid, stat, -jnp.inf))
 
 
-def glr_threshold(n: jnp.ndarray, delta: float) -> jnp.ndarray:
+def glr_threshold(n: jnp.ndarray, delta) -> jnp.ndarray:
     """beta(n, delta) = (1 + 1/n) log(3 n sqrt(n) / delta)."""
     n_f = jnp.maximum(n.astype(jnp.float32), 1.0)
     return (1.0 + 1.0 / n_f) * jnp.log(3.0 * n_f * jnp.sqrt(n_f) / delta)
@@ -76,13 +76,16 @@ class GLRCUCBState(NamedTuple):
     tau: jnp.ndarray        # scalar int — last restart round
     hist: jnp.ndarray       # (N, H) reward streams since restart (ring when full)
     restarts: jnp.ndarray   # scalar int — number of detected change points
+    hp: Any                 # traced hyper-parameters {gamma, delta, min_samples}
 
 
 @dataclasses.dataclass(frozen=True)
-class GLRCUCB:
+class GLRCUCB(TracedHyperParams):
     n_channels: int
     n_clients: int
     delta: float = 1e-3          # GLR confidence
+    gamma: float = 1.0           # UCB exploration scale (multiplies the Eq.-30
+                                 # confidence bonus; 1.0 = the paper's setting)
     alpha: float = 0.0           # forced-exploration rate (paper: 0.05*sqrt(logT/T))
     history: int = 2048          # H — per-channel stream buffer (ring once full)
     detector_stride: int = 1     # run the GLR detector every k rounds
@@ -90,8 +93,13 @@ class GLRCUCB:
     detector_backend: Optional[str] = None  # ops.glr_scan backend (None = auto)
     name: str = "glr-cucb"
 
+    # traced: numerics-only knobs.  alpha stays structural (it sizes the
+    # forced-exploration period with Python int arithmetic), as do
+    # history / detector_stride (shapes and trace-time control flow).
+    TRACED = ("gamma", "delta", "min_samples")
+
     # ------------------------------------------------------------------ api
-    def init(self, key: jax.Array) -> GLRCUCBState:
+    def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> GLRCUCBState:
         n, h = self.n_channels, self.history
         return GLRCUCBState(
             mu_tilde=jnp.zeros((n,), jnp.float32),
@@ -99,13 +107,14 @@ class GLRCUCB:
             tau=jnp.zeros((), jnp.int32),
             hist=jnp.zeros((n, h), jnp.float32),
             restarts=jnp.zeros((), jnp.int32),
+            hp=self.params() if hp is None else dict(hp),
         )
 
     def ucb(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
-        """Eq. 30: mu_tilde + sqrt(3 log(t - tau) / (2 D)); +inf for unseen arms."""
+        """Eq. 30: mu_tilde + gamma * sqrt(3 log(t - tau) / (2 D)); +inf unseen."""
         since = jnp.maximum((t - state.tau).astype(jnp.float32), 2.0)
         bonus = jnp.sqrt(3.0 * jnp.log(since) / (2.0 * jnp.maximum(state.counts, 1.0)))
-        ucb = state.mu_tilde + bonus
+        ucb = state.mu_tilde + state.hp["gamma"] * bonus
         return jnp.where(state.counts > 0, ucb, jnp.inf)
 
     def select(
@@ -167,8 +176,9 @@ class GLRCUCB:
         def run_detector(_):
             n_valid = jnp.minimum(counts, float(h)).astype(jnp.int32)
             stats = ops.glr_scan(new_hist, n_valid, backend=self.detector_backend)
-            thresh = glr_threshold(n_valid, self.delta)
-            fire = sched & (stats >= thresh) & (n_valid >= self.min_samples)
+            thresh = glr_threshold(n_valid, state.hp["delta"])
+            fire = (sched & (stats >= thresh)
+                    & (n_valid.astype(jnp.float32) >= state.hp["min_samples"]))
             return jnp.any(fire)
 
         stride_ok = (t % self.detector_stride) == 0
@@ -180,7 +190,7 @@ class GLRCUCB:
         new_hist = jnp.where(change, jnp.zeros_like(new_hist), new_hist)
         tau = jnp.where(change, t.astype(jnp.int32), state.tau)
         restarts = state.restarts + change.astype(jnp.int32)
-        return GLRCUCBState(mu, counts, tau, new_hist, restarts)
+        return GLRCUCBState(mu, counts, tau, new_hist, restarts, state.hp)
 
     def channel_scores(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
         """UCB values (Eq. 30) rank channels for the Sec.-V matcher."""

@@ -37,22 +37,23 @@ unchanged.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bandits.base import rotate_assignment
+from repro.core.bandits.base import TracedHyperParams, rotate_assignment
 
 
 class LyapunovState(NamedTuple):
     queues: jnp.ndarray     # (N,) virtual queues Q_k (fairness backlog)
     mu_sum: jnp.ndarray     # (N,) discounted reward sums
     pulls: jnp.ndarray      # (N,) discounted pull counts
+    hp: Any                 # traced {v, discount, min_rate | rate_slack}
 
 
 @dataclasses.dataclass(frozen=True)
-class LyapunovSched:
+class LyapunovSched(TracedHyperParams):
     n_channels: int
     n_clients: int
     v: float = 4.0                    # drift-vs-penalty weight (higher = greedier)
@@ -61,18 +62,25 @@ class LyapunovSched:
     discount: float = 0.98            # recency discount on the empirical means
     name: str = "lyapunov"
 
-    def _arrival(self) -> float:
-        if self.min_rate is not None:
-            return float(self.min_rate)
-        return self.rate_slack * self.n_clients / self.n_channels
+    def traced_fields(self) -> Tuple[str, ...]:
+        # which arrival parameterization is active (explicit rate vs fair-share
+        # slack) is structural; the chosen knob's value is traced
+        rate = ("min_rate",) if self.min_rate is not None else ("rate_slack",)
+        return ("v", "discount") + rate
+
+    def _arrival(self, hp: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        if "min_rate" in hp:
+            return hp["min_rate"]
+        return hp["rate_slack"] * (self.n_clients / self.n_channels)
 
     # ------------------------------------------------------------------ api
-    def init(self, key: jax.Array) -> LyapunovState:
+    def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> LyapunovState:
         n = self.n_channels
         return LyapunovState(
             queues=jnp.zeros((n,), jnp.float32),
             mu_sum=jnp.zeros((n,), jnp.float32),
             pulls=jnp.zeros((n,), jnp.float32),
+            hp=self.params() if hp is None else dict(hp),
         )
 
     def _mu_hat(self, state: LyapunovState) -> jnp.ndarray:
@@ -84,7 +92,7 @@ class LyapunovSched:
         m = self.n_clients
         # drift-plus-penalty weight; tiny key noise breaks early-round ties
         # (all-zero queues and means) without biasing converged behaviour
-        weight = state.queues + self.v * self._mu_hat(state)
+        weight = state.queues + state.hp["v"] * self._mu_hat(state)
         noise = jax.random.uniform(key, (self.n_channels,)) * 1e-6
         top = jnp.argsort(-(weight + noise))[:m]
         channels = rotate_assignment(top, t, m)
@@ -100,12 +108,13 @@ class LyapunovSched:
     ) -> LyapunovState:
         sched = jnp.zeros((self.n_channels,), jnp.float32).at[channels].set(1.0)
         r_vec = jnp.zeros((self.n_channels,), jnp.float32).at[channels].set(rewards)
-        queues = jnp.maximum(state.queues + self._arrival() - sched, 0.0)
-        rho = self.discount
+        queues = jnp.maximum(state.queues + self._arrival(state.hp) - sched, 0.0)
+        rho = state.hp["discount"]
         return LyapunovState(
             queues=queues,
             mu_sum=rho * state.mu_sum + r_vec,
             pulls=rho * state.pulls + sched,
+            hp=state.hp,
         )
 
     def channel_scores(self, state: LyapunovState, t: jnp.ndarray) -> jnp.ndarray:

@@ -17,22 +17,27 @@ re-centering), plus per-channel empirical statistics used by
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.bandits.base import combinations_array, rotate_assignment
+from repro.core.bandits.base import (
+    TracedHyperParams,
+    combinations_array,
+    rotate_assignment,
+)
 
 
 class MExp3State(NamedTuple):
     log_w: jnp.ndarray      # (C,) super-arm log-weights
     mu_sum: jnp.ndarray     # (N,) cumulative per-channel reward  (Eq. 31 numerator)
     pulls: jnp.ndarray      # (N,) per-channel observation counts (D_i)
+    hp: Any                 # traced hyper-parameters {gamma[, share_alpha]}
 
 
 @dataclasses.dataclass(frozen=True)
-class MExp3:
+class MExp3(TracedHyperParams):
     n_channels: int
     n_clients: int
     gamma: float = 0.5          # exploration rate γ ∈ (0, 1]
@@ -51,19 +56,26 @@ class MExp3:
     def n_super_arms(self) -> int:
         return self._combos.shape[0]
 
+    def traced_fields(self) -> Tuple[str, ...]:
+        # whether weight-sharing exists is structural (a Python branch in
+        # `update`); its *rate* is traced once the branch is on
+        return ("gamma",) + (("share_alpha",) if self.share_alpha > 0.0 else ())
+
     # ------------------------------------------------------------------ api
-    def init(self, key: jax.Array) -> MExp3State:
+    def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> MExp3State:
         c = self.n_super_arms
         return MExp3State(
             log_w=jnp.zeros((c,), jnp.float32),
             mu_sum=jnp.zeros((self.n_channels,), jnp.float32),
             pulls=jnp.zeros((self.n_channels,), jnp.float32),
+            hp=self.params() if hp is None else dict(hp),
         )
 
     def _probs(self, state: MExp3State) -> jnp.ndarray:
         c = self.n_super_arms
+        gamma = state.hp["gamma"]
         logits = state.log_w - jax.scipy.special.logsumexp(state.log_w)
-        return (1.0 - self.gamma) * jnp.exp(logits) + self.gamma / c
+        return (1.0 - gamma) * jnp.exp(logits) + gamma / c
 
     def select(
         self, state: MExp3State, t: jnp.ndarray, key: jax.Array, aoi: jnp.ndarray
@@ -88,16 +100,16 @@ class MExp3:
         p = self._probs(state)
         x_super = jnp.sum(rewards)                      # super-reward in [0, M]
         x_hat = x_super / jnp.maximum(p[idx], 1e-12)    # importance-weighted
-        log_w = state.log_w.at[idx].add(self.gamma * x_hat / c)
+        log_w = state.log_w.at[idx].add(state.hp["gamma"] * x_hat / c)
         if self.share_alpha > 0.0:
             # Exp3.S sharing: w_J <- w_J + (e*alpha/C) * sum_I w_I  (log-space)
             log_total = jax.scipy.special.logsumexp(log_w)
-            share = jnp.log(jnp.e * self.share_alpha / c) + log_total
+            share = jnp.log(jnp.e * state.hp["share_alpha"] / c) + log_total
             log_w = jnp.logaddexp(log_w, share)
         log_w = log_w - jnp.max(log_w)                  # re-center for stability
         mu_sum = state.mu_sum.at[channels].add(rewards)
         pulls = state.pulls.at[channels].add(1.0)
-        return MExp3State(log_w=log_w, mu_sum=mu_sum, pulls=pulls)
+        return MExp3State(log_w=log_w, mu_sum=mu_sum, pulls=pulls, hp=state.hp)
 
     def channel_scores(self, state: MExp3State, t: jnp.ndarray) -> jnp.ndarray:
         """Historical empirical mean per channel (Eq. 31)."""

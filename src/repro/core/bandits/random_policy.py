@@ -2,10 +2,12 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams
 
 
 class RandomState(NamedTuple):
@@ -14,12 +16,13 @@ class RandomState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class RandomScheduler:
+class RandomScheduler(TracedHyperParams):
     n_channels: int
     n_clients: int
     name: str = "random"
 
-    def init(self, key: jax.Array) -> RandomState:
+    # no tunable knobs: TRACED = () and `hp` is accepted (empty) and ignored
+    def init(self, key: jax.Array, hp: Optional[dict] = None) -> RandomState:
         n = self.n_channels
         return RandomState(
             mu_sum=jnp.zeros((n,), jnp.float32),

@@ -7,10 +7,12 @@ from "fairness by adaptive matching" in the ablations.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams
 
 
 class RRState(NamedTuple):
@@ -19,12 +21,13 @@ class RRState(NamedTuple):
 
 
 @dataclasses.dataclass(frozen=True)
-class RoundRobinScheduler:
+class RoundRobinScheduler(TracedHyperParams):
     n_channels: int
     n_clients: int
     name: str = "round-robin"
 
-    def init(self, key: jax.Array) -> RRState:
+    # no tunable knobs: TRACED = () and `hp` is accepted (empty) and ignored
+    def init(self, key: jax.Array, hp: Optional[dict] = None) -> RRState:
         n = self.n_channels
         return RRState(jnp.zeros((n,), jnp.float32), jnp.zeros((n,), jnp.float32))
 

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aoi import init_aoi, update_aoi, aoi_variance
+from repro.core.bandits.base import init_with_hp
 from repro.core.bandits.oracle import oracle_assign
 from repro.core.channels import ChannelEnv
 
@@ -34,12 +35,18 @@ def simulate_aoi_regret_impl(
     key: jax.Array,
     horizon: int,
     collect_curve: bool = True,
+    hp=None,
 ) -> Dict[str, jnp.ndarray]:
     """Unjitted simulation core (one scheduler/env/key triple).
 
     ``simulate_aoi_regret`` is its jitted entry point; the batched engine in
     ``repro.sim`` vmaps this same function over stacked envs and keys, so a
     batch-of-1 run traces the identical computation as the serial path.
+
+    ``hp`` optionally overrides the scheduler's traced hyper-parameter
+    pytree (``scheduler.params()``) — the vmapped grid axis of
+    ``repro.sim.simulate_aoi_regret_batch`` feeds stacked values through
+    here, so one compiled program serves a whole tuning grid.
     """
     m = scheduler.n_clients
 
@@ -68,7 +75,7 @@ def simulate_aoi_regret_impl(
         return new, out
 
     carry0 = SimCarry(
-        sched_state=scheduler.init(key),
+        sched_state=init_with_hp(scheduler, key, hp),
         aoi_pi=init_aoi(m),
         aoi_star=init_aoi(m),
         cum_regret=jnp.zeros(()),

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aoi import init_aoi, update_aoi, aoi_variance
+from repro.core.bandits.base import init_with_hp
 from repro.core.contribution import (
     ContributionBuffer,
     aggregation_weights,
@@ -75,7 +76,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
     proxy_loss_fn: Optional[Callable] = None  # flat params -> scalar (Eq. 35)
 
     # ------------------------------------------------------------------ init
-    def init(self, params: Any, key: jax.Array) -> AsyncFLState:
+    def init(self, params: Any, key: jax.Array, hp: Any = None) -> AsyncFLState:
         m = self.cfg.n_clients
         p = int(tree_flatten_concat(params).shape[0])
         return AsyncFLState(
@@ -87,13 +88,18 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             contrib_buf=init_buffer(m, p),
             contrib=jnp.ones((m,), jnp.float32),
             zeta=jnp.full((m,), 1.0 / m),
-            sched_state=self.scheduler.init(key),
+            sched_state=init_with_hp(self.scheduler, key, hp),
             matcher_state=AdaptiveMatcher(self.cfg.matcher_beta).init(),
             t=jnp.zeros((), jnp.int32),
         )
 
     def init_batch(
-        self, params: Any, keys: jax.Array, params_axis: int | None = None
+        self,
+        params: Any,
+        keys: jax.Array,
+        params_axis: int | None = None,
+        hp: Any = None,
+        hp_axis: int | None = None,
     ) -> AsyncFLState:
         """Stack B independent init states — the input format of the batched
         FL engine (``repro.sim.simulate_fl_batch``).
@@ -102,8 +108,15 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         of the returned state gains the same leading (B,) axis.  ``params`` is
         broadcast to all batch entries by default; pass ``params_axis=0`` for
         per-seed initial models (leaves pre-stacked on a leading axis).
+
+        ``hp`` optionally overrides the scheduler's traced hyper-parameters
+        (``scheduler.params()`` pytree): a stacked grid with ``hp_axis=0``
+        turns the batch axis into a scheduler *tuning* axis — B grid points
+        training through ONE ``simulate_fl_batch`` program — while
+        ``hp_axis=None`` broadcasts a single override across the batch.
         """
-        return jax.vmap(self.init, in_axes=(params_axis, 0))(params, keys)
+        return jax.vmap(self.init, in_axes=(params_axis, 0, hp_axis))(
+            params, keys, hp)
 
     # ------------------------------------------------------------------ round
     def _round_impl(

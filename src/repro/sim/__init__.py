@@ -2,19 +2,34 @@
 
 Public API:
   simulate_aoi_regret_batch  vmapped regret simulation over envs x seeds
+                             x hyper-parameter grids (hparams/hp_axis)
   simulate_fl_batch          vmapped AsyncFLTrainer.run over stacked seeds
   SweepCase / FLSweepCase    heterogeneous sweep requests (regret / FL)
-  sweep                      sweep driver (vmappable buckets, mixed cases)
+  sweep                      sweep driver (vmappable buckets, mixed cases,
+                             traced-hp merging, AOT executable cache,
+                             shard=True for device-sharded buckets)
   group_cases                bucket partitioning (exposed for tests)
+  sweep_cache_stats /        executable-cache hit/miss counters
+  clear_sweep_cache
+  sharded_aoi_regret_batch   shard_map'd engine over a 1-D device mesh
+  sweep_mesh                 1-D mesh over local devices
 """
 from repro.sim.engine import simulate_aoi_regret_batch
 from repro.sim.fl_batch import simulate_fl_batch
+from repro.sim.shard import (
+    pad_batch,
+    sharded_aoi_regret_batch,
+    sweep_mesh,
+    unpad_batch,
+)
 from repro.sim.sweep import (
     BucketReport,
     FLSweepCase,
     SweepCase,
+    clear_sweep_cache,
     group_cases,
     sweep,
+    sweep_cache_stats,
 )
 
 __all__ = [
@@ -25,4 +40,10 @@ __all__ = [
     "BucketReport",
     "group_cases",
     "sweep",
+    "sweep_cache_stats",
+    "clear_sweep_cache",
+    "sharded_aoi_regret_batch",
+    "sweep_mesh",
+    "pad_batch",
+    "unpad_batch",
 ]

@@ -17,6 +17,14 @@ with broadcast supported on either side (a single env across many seeds,
 or one key across many envs).  Scheduler state is already a pytree of
 arrays, so the policy loop vmaps for free — no scheduler changes needed.
 
+The same vmap carries a third, *hyper-parameter* axis: ``hparams`` takes a
+stacked ``scheduler.params()`` pytree (each traced scalar field grown to
+(G,)) and ``hp_axis=0`` maps over it, so a whole ``gamma × delta`` tuning
+grid runs as ONE compiled program per policy *family* — the per-point
+values never enter the trace (they flow through the state pytree; see
+``repro.core.bandits.base.TracedHyperParams``).  Without ``hparams`` the
+scheduler's own values are baked in as constants, exactly as before.
+
 Because a batch-of-1 vmap traces the very same computation as the serial
 path, batch-size-1 results match ``simulate_aoi_regret`` bitwise (asserted
 in tests and re-checked by the benchmark harness at every run).
@@ -35,7 +43,9 @@ from repro.core.regret import simulate_aoi_regret_impl
 
 @partial(
     jax.jit,
-    static_argnames=("scheduler", "horizon", "collect_curve", "env_axis", "key_axis"),
+    static_argnames=(
+        "scheduler", "horizon", "collect_curve", "env_axis", "key_axis", "hp_axis",
+    ),
 )
 def simulate_aoi_regret_batch(
     scheduler,
@@ -45,30 +55,41 @@ def simulate_aoi_regret_batch(
     collect_curve: bool = True,
     env_axis: int | None = 0,
     key_axis: int | None = 0,
+    hparams=None,
+    hp_axis: int | None = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Vmapped ``simulate_aoi_regret`` over stacked envs and/or keys.
+    """Vmapped ``simulate_aoi_regret`` over stacked envs, keys and/or
+    hyper-parameter grids.
 
     Parameters
     ----------
     scheduler:  a `repro.core.bandits` scheduler (static — one compiled
-                program per scheduler config).
+                program per scheduler *family* when ``hparams`` carries the
+                traced values, per config otherwise).
     envs:       a ``ChannelEnv`` whose leaves carry a leading batch axis
                 (from ``stack_envs``), or an unbatched env with
-                ``env_axis=None`` to broadcast it across the key batch.
+                ``env_axis=None`` to broadcast it across the batch.
     keys:       (B, ...) PRNG keys, or a single key with ``key_axis=None``.
     horizon:    rounds per simulation (static).
-    env_axis / key_axis: 0 to map over the leading axis, None to broadcast.
-                At least one must be 0.
+    hparams:    optional stacked traced-hyper-parameter pytree — each leaf
+                of ``scheduler.params()`` grown to (G,) — mapped with
+                ``hp_axis=0`` (a tuning grid), or a single unstacked
+                ``params()`` dict broadcast with ``hp_axis=None``.  ``None``
+                bakes the scheduler's own values in as constants.
+    env_axis / key_axis / hp_axis: 0 to map over the leading axis, None to
+                broadcast.  At least one must be 0.
 
     Returns the same dict as ``simulate_aoi_regret`` with every leaf gaining
     a leading batch dimension of size B.  All outputs stay device-resident;
     nothing syncs to the host until the caller reads a value.
     """
-    if env_axis is None and key_axis is None:
+    if env_axis is None and key_axis is None and hp_axis is None:
         raise ValueError("simulate_aoi_regret_batch: nothing to batch over "
-                         "(env_axis and key_axis are both None)")
+                         "(env_axis, key_axis and hp_axis are all None)")
 
-    def one(env, key):
-        return simulate_aoi_regret_impl(scheduler, env, key, horizon, collect_curve)
+    def one(env, key, hp):
+        return simulate_aoi_regret_impl(
+            scheduler, env, key, horizon, collect_curve, hp=hp)
 
-    return jax.vmap(one, in_axes=(env_axis, key_axis))(envs, keys)
+    return jax.vmap(one, in_axes=(env_axis, key_axis, hp_axis))(
+        envs, keys, hparams)

@@ -25,6 +25,13 @@ trainer, and the ``sweep`` driver buckets FL cases by trainer so
 heterogeneous comparisons (e.g. GLR-CUCB vs the related-work baselines)
 compile once per policy.
 
+The batch axis doubles as a scheduler *tuning* axis: the scheduler's
+traced hyper-parameters live in its state pytree (see
+``repro.core.bandits.base.TracedHyperParams``), so
+``trainer.init_batch(params, keys, hp=stacked_params, hp_axis=0)`` trains
+B grid points of the same policy family — per-entry ``gamma``/``delta``/
+EMA values — through this ONE vmapped program, no engine changes needed.
+
 Batch-of-1 engine output matches ``AsyncFLTrainer.run`` **bitwise**: both
 entry points execute ``AsyncFLTrainer._run_vmapped`` — ``run`` at batch 1,
 the engine at batch B — so at B = 1 the two lower the *identical* HLO

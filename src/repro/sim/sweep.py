@@ -2,31 +2,52 @@
 
 A figure-level sweep mixes schedulers (different state pytrees), horizons
 and env families — those cannot share one vmap.  ``sweep`` groups cases by
-(scheduler config, horizon, env treedef + leaf shapes), runs each bucket
-through ``simulate_aoi_regret_batch`` as ONE compiled program, and returns
-per-case results keyed by case name.
+(scheduler *structural signature*, horizon, env treedef + leaf shapes),
+runs each bucket through ``simulate_aoi_regret_batch`` as ONE compiled
+program, and returns per-case results keyed by case name.
 
-Scheduler configs are frozen dataclasses (hashable, compared by value), so
-two cases with "the same" scheduler built twice still land in one bucket
-and share one executable.
+Scheduler configs are frozen dataclasses (hashable, compared by value);
+the bucket key is their ``hp_signature()``: every structural field by
+value, traced hyper-parameter fields by *name only*.  Two cases whose
+schedulers differ solely in traced scalars (``gamma``, ``delta``, EMA
+rates, ...) therefore land in ONE bucket — the per-case values are stacked
+into an ``hparams`` pytree and fed through the engine's vmapped
+hyper-parameter axis, so a 16-point tuning grid costs one compile, not 16.
+
+Compiled programs are additionally kept in a process-level AOT executable
+cache keyed on the bucket signature (+ batch size / backend / mesh):
+repeated ``sweep`` calls with structurally identical buckets — e.g. a
+benchmark running fig2a then a tuning grid with the same policy family, or
+two grids with different scalar values — reuse the executable instead of
+re-lowering.  ``sweep_cache_stats()`` exposes hit/miss counts (the
+benchmark harness reports them in ``BENCH_sim.json``).
+
+``sweep(..., shard=True)`` distributes every regret bucket's batch axis
+over a 1-D device mesh via ``repro.sim.shard`` (``shard_map``; buckets are
+embarrassingly parallel).  On a single device the sharded program is
+bitwise identical to the unsharded one, so the path stays exercised in CPU
+CI.
 
 FL cases (``FLSweepCase``) ride the same driver: a mixed case list is
 bucketed with regret cases side by side, and each FL bucket executes as one
 ``simulate_fl_batch`` program (vmap over seeds).  ``AsyncFLTrainer`` hashes
 by *identity* (its env holds arrays), so FL cases share a bucket only when
 they share the same trainer instance — build one trainer per policy and
-fan the seeds out as cases.
+fan the seeds out as cases.  (FL buckets always run unsharded; shard them
+by handing disjoint case lists to per-host processes.)
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.bandits.base import stack_params
 from repro.core.channels import ChannelEnv, stack_envs
+from repro.sim import shard as _shard
 from repro.sim.engine import simulate_aoi_regret_batch
 from repro.sim.fl_batch import simulate_fl_batch
 
@@ -70,7 +91,13 @@ class BucketReport:
     batch: int
     compile_s: float
     wall_s: float
+    cache_hit: bool = False      # AOT executable served from the sweep cache
+    sharded: bool = False        # ran through the shard_map path
 
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
 
 def _tree_sig(tree) -> Tuple:
     leaves, treedef = jax.tree_util.tree_flatten(tree)
@@ -78,11 +105,19 @@ def _tree_sig(tree) -> Tuple:
     return (treedef, shapes)
 
 
+def _sched_sig(sched) -> Any:
+    """Structural identity: hp_signature when the policy supports traced
+    hyper-parameters, the (hashable) config itself otherwise."""
+    fn = getattr(sched, "hp_signature", None)
+    return fn() if fn is not None else sched
+
+
 def _bucket_key(case):
     if isinstance(case, FLSweepCase):
         return ("fl", case.trainer, _tree_sig(case.params),
                 _tree_sig((case.batches_x, case.batches_y, case.round_keys)))
-    return ("regret", case.scheduler, case.horizon, _tree_sig(case.env))
+    return ("regret", _sched_sig(case.scheduler), case.horizon,
+            _tree_sig(case.env))
 
 
 def group_cases(cases: Sequence[Any]) -> List[List[Any]]:
@@ -98,28 +133,103 @@ def group_cases(cases: Sequence[Any]) -> List[List[Any]]:
     return [buckets[k] for k in order]
 
 
-def _run_regret_bucket(bucket, collect_curve: bool, block: bool):
+# ---------------------------------------------------------------------------
+# process-level AOT executable cache
+# ---------------------------------------------------------------------------
+
+_EXEC_CACHE: Dict[Any, Any] = {}
+_EXEC_STATS = {"hits": 0, "misses": 0}
+
+
+def sweep_cache_stats() -> Dict[str, int]:
+    """Hit/miss counts of the sweep executable cache (misses == compiles)."""
+    return dict(_EXEC_STATS)
+
+
+def clear_sweep_cache() -> None:
+    """Drop every cached executable and reset the hit/miss counters."""
+    _EXEC_CACHE.clear()
+    _EXEC_STATS.update(hits=0, misses=0)
+
+
+def _compile_cached(cache_key, do_lower):
+    """AOT-compile through the executable cache; returns (compiled, compile_s,
+    cache_hit)."""
+    compiled = _EXEC_CACHE.get(cache_key)
+    if compiled is not None:
+        _EXEC_STATS["hits"] += 1
+        return compiled, 0.0, True
+    t0 = time.perf_counter()
+    compiled = do_lower().compile()
+    compile_s = time.perf_counter() - t0
+    _EXEC_CACHE[cache_key] = compiled
+    _EXEC_STATS["misses"] += 1
+    return compiled, compile_s, False
+
+
+def _mesh_desc(mesh) -> Any:
+    if mesh is None:
+        return None
+    return tuple(str(d) for d in mesh.devices.flat)
+
+
+# ---------------------------------------------------------------------------
+# bucket runners
+# ---------------------------------------------------------------------------
+
+def _run_regret_bucket(bucket, collect_curve: bool, block: bool, mesh=None):
     envs = stack_envs([c.env for c in bucket])
     keys = jnp.stack([c.key for c in bucket])
+    # merge traced scalars: one (B,)-stacked params() pytree for the bucket;
+    # the representative scheduler's own traced values never reach the
+    # compiled program.  None for knob-free or legacy (no-params())
+    # schedulers — those keep the plain init(key) path.
+    hparams = stack_params([c.scheduler for c in bucket])
+    hp_axis = None if hparams is None else 0
     sched, horizon = bucket[0].scheduler, bucket[0].horizon
+    cache_key = (_bucket_key(bucket[0]), len(bucket), collect_curve,
+                 jax.default_backend(), _mesh_desc(mesh))
 
-    t0 = time.perf_counter()
+    if mesh is not None:
+        d = int(mesh.devices.size)
+        envs_c, b = _shard.pad_batch(envs, d)
+        keys_c, _ = _shard.pad_batch(keys, d)
+        hp_c = _shard.pad_batch(hparams, d)[0] if hparams is not None else None
+        fn = _shard.build_sharded(sched, horizon, collect_curve, mesh,
+                                  hp_axis=hp_axis)
+        do_lower = lambda: jax.jit(fn).lower(envs_c, keys_c, hp_c)
+        call = lambda compiled: compiled(envs_c, keys_c, hp_c)
+        padded = (-b) % d != 0
+        unpad = (lambda out: _shard.unpad_batch(out, b)) if padded else (lambda out: out)
+    else:
+        do_lower = lambda: simulate_aoi_regret_batch.lower(
+            sched, envs, keys, horizon, collect_curve=collect_curve,
+            hparams=hparams, hp_axis=hp_axis)
+        # a Compiled must be invoked with the arg/kwarg structure it was
+        # lowered with — hparams went in as a keyword
+        call = lambda compiled: compiled(envs, keys, hparams=hparams)
+        unpad = lambda out: out
+
+    cache_hit = False
     if block:
-        # AOT-compile to separate compile_s from wall_s without paying a
-        # throwaway warm-up execution of the whole bucket
-        compiled = simulate_aoi_regret_batch.lower(
-            sched, envs, keys, horizon, collect_curve=collect_curve
-        ).compile()
-        compile_s = time.perf_counter() - t0
+        compiled, compile_s, cache_hit = _compile_cached(cache_key, do_lower)
         t1 = time.perf_counter()
-        out = compiled(envs, keys)
+        out = call(compiled)
         jax.block_until_ready(out)
         wall_s = time.perf_counter() - t1
     else:
-        out = simulate_aoi_regret_batch(
-            sched, envs, keys, horizon, collect_curve=collect_curve)
+        t0 = time.perf_counter()
+        if mesh is not None:
+            out = _shard.sharded_aoi_regret_batch(
+                sched, envs, keys, horizon, collect_curve=collect_curve,
+                hparams=hparams, hp_axis=hp_axis, mesh=mesh)
+            unpad = lambda o: o           # already unpadded by the shard API
+        else:
+            out = simulate_aoi_regret_batch(
+                sched, envs, keys, horizon, collect_curve=collect_curve,
+                hparams=hparams, hp_axis=hp_axis)
         compile_s = wall_s = time.perf_counter() - t0
-    return out, compile_s, wall_s
+    return unpad(out), compile_s, wall_s, cache_hit
 
 
 def _run_fl_bucket(bucket, block: bool):
@@ -133,38 +243,52 @@ def _run_fl_bucket(bucket, block: bool):
     by = jnp.stack([jnp.asarray(c.batches_y) for c in bucket])
     rkeys = jnp.stack([c.round_keys for c in bucket])
 
-    t0 = time.perf_counter()
+    cache_hit = False
     if block:
-        compiled = simulate_fl_batch.lower(tr, states, bx, by, rkeys).compile()
-        compile_s = time.perf_counter() - t0
+        cache_key = (_bucket_key(bucket[0]), len(bucket),
+                     jax.default_backend(), None)
+        do_lower = lambda: simulate_fl_batch.lower(tr, states, bx, by, rkeys)
+        compiled, compile_s, cache_hit = _compile_cached(cache_key, do_lower)
         t1 = time.perf_counter()
         out = compiled(states, bx, by, rkeys)
         jax.block_until_ready(out)
         wall_s = time.perf_counter() - t1
     else:
+        t0 = time.perf_counter()
         out = simulate_fl_batch(tr, states, bx, by, rkeys)
         compile_s = wall_s = time.perf_counter() - t0
     final_states, metrics = out
-    return {"state": final_states, "metrics": metrics}, compile_s, wall_s
+    return ({"state": final_states, "metrics": metrics},
+            compile_s, wall_s, cache_hit)
 
 
 def sweep(
     cases: Sequence[Any],
     collect_curve: bool = True,
     block: bool = True,
+    shard: bool = False,
+    mesh: Optional[Any] = None,
 ) -> Tuple[Dict[str, Dict[str, Any]], List[BucketReport]]:
     """Run every case, batching compatible ones into single XLA programs.
 
     ``cases`` may mix ``SweepCase`` (regret) and ``FLSweepCase`` (federated
     training) entries; each bucket is homogeneous and executes through the
     matching engine (``simulate_aoi_regret_batch`` / ``simulate_fl_batch``).
+    Regret cases whose schedulers differ only in traced hyper-parameters
+    share one bucket (the scalars are stacked and vmapped — see module
+    docstring), so a tuning grid compiles once per policy family.
+
+    ``shard=True`` spreads each regret bucket's batch over a 1-D device
+    mesh (``mesh`` or all local devices) via ``repro.sim.shard``; a single
+    device runs the identical program (bitwise) through the same path.
 
     Returns ``(results, report)``:
       results: case name -> the ``simulate_aoi_regret`` result dict (regret
                cases) or ``{"state": AsyncFLState, "metrics": {k: (R,)}}``
                (FL cases), batch axis already stripped.
       report:  one ``BucketReport`` per executed bucket: ``compile_s`` from
-               an AOT lower+compile, ``wall_s`` the blocked execution time.
+               an AOT lower+compile (0.0 when the executable cache hit —
+               see ``cache_hit``), ``wall_s`` the blocked execution time.
                ``block=False`` skips AOT and blocking for latency-insensitive
                callers; both times then record only dispatch (not execution)
                and must not be used as measurements.
@@ -172,19 +296,22 @@ def sweep(
     names = [c.name for c in cases]
     if len(set(names)) != len(names):
         raise ValueError(f"sweep: duplicate case names: {names}")
+    run_mesh = (mesh if mesh is not None else _shard.sweep_mesh()) if shard else None
 
     results: Dict[str, Dict[str, Any]] = {}
     report: List[BucketReport] = []
     for bucket in group_cases(cases):
         if isinstance(bucket[0], FLSweepCase):
-            out, compile_s, wall_s = _run_fl_bucket(bucket, block)
+            out, compile_s, wall_s, hit = _run_fl_bucket(bucket, block)
+            sharded = False
         else:
-            out, compile_s, wall_s = _run_regret_bucket(
-                bucket, collect_curve, block)
+            out, compile_s, wall_s, hit = _run_regret_bucket(
+                bucket, collect_curve, block, run_mesh)
+            sharded = run_mesh is not None
 
         for i, c in enumerate(bucket):
             results[c.name] = jax.tree_util.tree_map(lambda x, i=i: x[i], out)
         report.append(BucketReport(
             names=[c.name for c in bucket], batch=len(bucket),
-            compile_s=compile_s, wall_s=wall_s))
+            compile_s=compile_s, wall_s=wall_s, cache_hit=hit, sharded=sharded))
     return results, report

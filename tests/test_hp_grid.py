@@ -1,0 +1,322 @@
+"""Hyper-parameter-vmapped grid sweeps: traced-scalar policy configs,
+engine hp axis, sweep bucket merging, and the AOT executable cache.
+
+The contract under test (see `repro.core.bandits.base.TracedHyperParams`):
+a policy's traced scalars flow through the state pytree, never the trace,
+so (a) a vmapped grid row reproduces the per-value serial run — bitwise at
+grid-size 1 — and (b) cases differing only in traced scalars share ONE
+compiled program through `sweep`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import (
+    AoIAware,
+    ChannelAwareAsync,
+    GLRCUCB,
+    LyapunovSched,
+    MExp3,
+    RandomScheduler,
+    stack_params,
+)
+from repro.core.channels import (
+    make_stationary,
+    random_adversarial_env,
+    random_piecewise_env,
+    stack_envs,
+)
+from repro.core.regret import simulate_aoi_regret
+from repro.sim import (
+    SweepCase,
+    clear_sweep_cache,
+    group_cases,
+    simulate_aoi_regret_batch,
+    sweep,
+    sweep_cache_stats,
+)
+
+KEY = jax.random.PRNGKey(0)
+T = 400
+
+
+_stack_params = stack_params
+
+
+# ---------------------------------------------------------------------------
+# traced-field conventions
+# ---------------------------------------------------------------------------
+
+def test_replace_traced_rejects_structural_fields():
+    s = GLRCUCB(5, 2)
+    with pytest.raises(ValueError, match="not traced"):
+        s.replace_traced(history=512)
+    tuned = s.replace_traced(gamma=0.7, delta=1e-2)
+    assert (tuned.gamma, tuned.delta) == (0.7, 1e-2)
+    assert tuned.history == s.history
+
+
+def test_hp_signature_merges_traced_and_splits_structural():
+    base = GLRCUCB(5, 2, history=64)
+    assert base.hp_signature() == base.replace_traced(delta=1e-5).hp_signature()
+    assert base.hp_signature() != GLRCUCB(5, 2, history=128).hp_signature()
+    # nested wrapper: traced diffs in the wrapped policy merge too
+    aa_a = AoIAware(GLRCUCB(5, 2, delta=1e-2))
+    aa_b = AoIAware(GLRCUCB(5, 2, delta=1e-4))
+    assert aa_a.hp_signature() == aa_b.hp_signature()
+    # the Exp3.S share branch is structural: on/off splits, the rate merges
+    assert (MExp3(5, 2, share_alpha=0.0).hp_signature()
+            != MExp3(5, 2, share_alpha=1e-3).hp_signature())
+    assert (MExp3(5, 2, share_alpha=1e-3).hp_signature()
+            == MExp3(5, 2, share_alpha=5e-3).hp_signature())
+    # Lyapunov arrival parameterization is structural, its value traced
+    assert (LyapunovSched(5, 2, min_rate=0.3).hp_signature()
+            != LyapunovSched(5, 2).hp_signature())
+    assert (LyapunovSched(5, 2, min_rate=0.3).hp_signature()
+            == LyapunovSched(5, 2, min_rate=0.4).hp_signature())
+
+
+def test_params_roundtrip_defaults_bitwise():
+    """init(hp=params()) must equal init() — the no-override identity every
+    serial entry point relies on."""
+    for s in [GLRCUCB(5, 2, history=32), MExp3(5, 2, share_alpha=1e-3),
+              AoIAware(ChannelAwareAsync(5, 2)), LyapunovSched(5, 2)]:
+        a = s.init(KEY)
+        b = s.init(KEY, hp=s.params())
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# grid-size-1 bitwise parity (the engine's hp-axis contract)
+# ---------------------------------------------------------------------------
+
+def test_grid1_bitwise_matches_per_value_serial():
+    """A vmapped gamma/delta grid row must match the per-value serial run
+    bitwise at grid-size 1 — with the representative scheduler's OWN traced
+    values differing from the grid row's, to prove the compiled program
+    reads hp from the input, not the config."""
+    env = random_piecewise_env(KEY, 5, T, 3)
+    rep = GLRCUCB(5, 2, history=128, detector_stride=4)            # defaults
+    tuned = rep.replace_traced(gamma=0.65, delta=3e-2, min_samples=12)
+    serial = simulate_aoi_regret(tuned, env, KEY, T)
+    grid1 = simulate_aoi_regret_batch(
+        rep, stack_envs([env]), jnp.stack([KEY]), T,
+        hparams=_stack_params([tuned]), hp_axis=0)
+    for k in serial:
+        np.testing.assert_array_equal(
+            np.asarray(serial[k]), np.asarray(grid1[k][0]), err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# randomized grid-vs-loop equivalence over every traced policy
+# ---------------------------------------------------------------------------
+
+def _randomize(cfg, rng):
+    """A random traced-field override in each knob's valid domain (MExp3's
+    exploration gamma is a mixture weight in (0, 1]; GLR-CUCB's gamma is an
+    unconstrained UCB bonus scale)."""
+    ranges = {
+        "gamma": (0.2, 0.9) if isinstance(cfg, MExp3) else (0.3, 1.5),
+        "delta": (1e-4, 1e-1), "min_samples": (4, 16),
+        "share_alpha": (1e-4, 1e-2), "threshold_scale": (0.5, 2.0),
+        "discount": (0.8, 0.99), "ema": (0.01, 0.3), "explore_eps": (0.05, 0.4),
+        "v": (0.5, 8.0), "rate_slack": (0.2, 0.8), "min_rate": (0.1, 0.5),
+    }
+    vals = {}
+    for f in cfg.traced_fields():
+        lo, hi = ranges[f]
+        v = float(rng.uniform(lo, hi))
+        vals[f] = int(round(v)) if f == "min_samples" else v
+    new = cfg.replace_traced(**vals)
+    if hasattr(cfg, "base"):        # AoIAware: randomize the wrapped policy too
+        new = dataclasses.replace(new, base=_randomize(cfg.base, rng))
+    return new
+
+
+POLICIES = [
+    ("glr-cucb", GLRCUCB(5, 2, history=64, detector_stride=4),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+    ("m-exp3", MExp3(5, 2),
+     lambda: random_adversarial_env(KEY, 5, T, flip_prob=0.01)),
+    ("m-exp3-s", MExp3(5, 2, share_alpha=1e-3),
+     lambda: random_adversarial_env(KEY, 5, T, flip_prob=0.01)),
+    ("aa-glr-cucb", AoIAware(GLRCUCB(5, 2, history=64, detector_stride=4)),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+    ("channel-aware", ChannelAwareAsync(5, 2),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+    ("lyapunov", LyapunovSched(5, 2),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+    ("lyapunov-rate", LyapunovSched(5, 2, min_rate=0.3),
+     lambda: random_piecewise_env(KEY, 5, T, 3)),
+]
+
+
+@pytest.mark.parametrize("name,rep,env_fn", POLICIES,
+                         ids=[p[0] for p in POLICIES])
+def test_randomized_grid_matches_per_value_loop(name, rep, env_fn):
+    env = env_fn()
+    rng = np.random.default_rng(abs(hash(name)) % 2**32)
+    grid = [_randomize(rep, rng) for _ in range(3)]
+    out = simulate_aoi_regret_batch(
+        rep, env, KEY, T, env_axis=None, key_axis=None,
+        hparams=_stack_params(grid), hp_axis=0)
+    for i, cfg in enumerate(grid):
+        want = simulate_aoi_regret(cfg, env, KEY, T)
+        for k in want:
+            np.testing.assert_allclose(
+                np.asarray(want[k]), np.asarray(out[k][i]),
+                rtol=1e-6, atol=1e-4, err_msg=f"{name}[{i}].{k}")
+
+
+# ---------------------------------------------------------------------------
+# sweep: traced-scalar merging + executable cache
+# ---------------------------------------------------------------------------
+
+def test_sweep_merges_traced_scalar_cases_into_one_bucket():
+    env = random_piecewise_env(KEY, 5, T, 2)
+    base = GLRCUCB(5, 2, history=64, detector_stride=4)
+    grid = [base.replace_traced(gamma=g, delta=d)
+            for g in (0.6, 1.0, 1.4) for d in (1e-2, 1e-3)]
+    cases = [SweepCase(f"p{i}", s, env, KEY, T) for i, s in enumerate(grid)]
+    cases.append(SweepCase("rand", RandomScheduler(5, 2), env, KEY, T))
+    assert sorted(len(b) for b in group_cases(cases)) == [1, 6]
+
+    results, report = sweep(cases, block=True)
+    grid_bucket = next(r for r in report if r.batch == 6)
+    assert not grid_bucket.cache_hit or sweep_cache_stats()["misses"] >= 1
+    for i, s in enumerate(grid):
+        want = simulate_aoi_regret(s, env, KEY, T)
+        np.testing.assert_array_equal(
+            np.asarray(want["final_regret"]),
+            np.asarray(results[f"p{i}"]["final_regret"]), err_msg=f"p{i}")
+
+
+def test_sweep_accepts_legacy_scheduler_without_hp_convention():
+    """A scheduler written against the pre-traced-hp protocol (plain
+    ``init(self, key)``, no ``params()``/``hp_signature()``) must still run
+    through sweep() and the engines — it buckets by config value and keeps
+    the hp-free init path."""
+    import dataclasses as _dc
+    from typing import NamedTuple
+
+    class _LegacyState(NamedTuple):
+        pulls: jnp.ndarray
+
+    @_dc.dataclass(frozen=True)
+    class LegacySched:
+        n_channels: int
+        n_clients: int
+        name: str = "legacy"
+
+        def init(self, key):
+            return _LegacyState(jnp.zeros((self.n_channels,), jnp.float32))
+
+        def select(self, state, t, key, aoi):
+            perm = jax.random.permutation(key, self.n_channels)
+            return perm[: self.n_clients], jnp.zeros((), jnp.int32)
+
+        def update(self, state, t, channels, rewards, aux):
+            return _LegacyState(state.pulls.at[channels].add(1.0))
+
+        def channel_scores(self, state, t):
+            return state.pulls
+
+    env = make_stationary(jnp.linspace(0.9, 0.1, 5))
+    cases = [SweepCase(f"l{i}", LegacySched(5, 2), env,
+                       jax.random.fold_in(KEY, i), 200) for i in range(3)]
+    results, report = sweep(cases, block=True)
+    assert report[0].batch == 3      # value-equal legacy configs still bucket
+    for c in cases:
+        want = simulate_aoi_regret(c.scheduler, c.env, c.key, c.horizon)
+        np.testing.assert_array_equal(
+            np.asarray(want["final_regret"]),
+            np.asarray(results[c.name]["final_regret"]), err_msg=c.name)
+
+
+def test_sweep_executable_cache_reuses_compiles_across_calls():
+    """A second sweep with the same structure but different traced values and
+    keys must be served entirely from the executable cache (0 new compiles),
+    and still reproduce the per-value serial results."""
+    clear_sweep_cache()
+    env = random_piecewise_env(KEY, 5, T, 2)
+    base = ChannelAwareAsync(5, 2)
+
+    def run(tag, emas):
+        cases = [SweepCase(f"{tag}{i}", base.replace_traced(ema=e), env,
+                           jax.random.fold_in(KEY, hash(tag) % 1000 + i), T)
+                 for i, e in enumerate(emas)]
+        return cases, sweep(cases, block=True)
+
+    _, (_, report1) = run("a", [0.02, 0.1, 0.3])
+    stats1 = sweep_cache_stats()
+    cases2, (results2, report2) = run("b", [0.05, 0.15, 0.25])
+    stats2 = sweep_cache_stats()
+
+    assert stats1["misses"] == 1 and stats1["hits"] == 0, stats1
+    assert stats2["misses"] == 1 and stats2["hits"] == 1, stats2
+    assert [r.cache_hit for r in report1] == [False]
+    assert [r.cache_hit for r in report2] == [True]
+    for c in cases2:
+        want = simulate_aoi_regret(c.scheduler, c.env, c.key, c.horizon)
+        np.testing.assert_array_equal(
+            np.asarray(want["final_regret"]),
+            np.asarray(results2[c.name]["final_regret"]), err_msg=c.name)
+
+
+# ---------------------------------------------------------------------------
+# FL: the batch axis as a scheduler tuning axis (init_batch hp/hp_axis)
+# ---------------------------------------------------------------------------
+
+def test_fl_batch_hp_grid_matches_per_value_serial():
+    from repro.data import make_federated_classification
+    from repro.fl import AsyncFLConfig, AsyncFLTrainer
+    from repro.sim import simulate_fl_batch
+
+    m, n, r = 4, 6, 5
+    cx, cy, *_ = make_federated_classification(
+        m, samples_per_client=32, dim=8, alpha=0.3)
+    k1, k2 = jax.random.split(KEY)
+    params = {"w": jax.random.normal(k1, (8, 10)) * 0.2, "b": jnp.zeros(10)}
+
+    def loss(p, x, y):
+        lg = jax.nn.log_softmax(x @ p["w"] + p["b"])
+        return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
+
+    cfg = AsyncFLConfig(n_clients=m, n_channels=n, local_epochs=1,
+                        client_lr=0.1, server_lr=0.1)
+    env = make_stationary(jnp.linspace(0.9, 0.2, n))
+    rep = GLRCUCB(n, m, history=32)
+    grid = [rep.replace_traced(gamma=g, delta=d)
+            for g, d in [(0.7, 1e-2), (1.0, 1e-3), (1.3, 1e-4)]]
+
+    bx = jax.random.normal(k2, (r, m, 1, 8, 8))
+    by = jax.random.randint(jax.random.fold_in(k2, 1), (r, m, 1, 8), 0, 10)
+    rkeys = jnp.stack([jax.random.fold_in(KEY, 50 + t) for t in range(r)])
+
+    # batched: 3 grid points of ONE trainer, hp fanned out across the batch
+    tr = AsyncFLTrainer(cfg, rep, env, loss)
+    states = tr.init_batch(
+        params, jnp.stack([KEY] * len(grid)),
+        hp=_stack_params(grid), hp_axis=0)
+    st_b, mets_b = simulate_fl_batch(
+        tr, states, bx, by, rkeys, data_axis=None, key_axis=None)
+
+    # serial reference: one trainer per grid point
+    for i, cfg_i in enumerate(grid):
+        tr_i = AsyncFLTrainer(cfg, cfg_i, env, loss)
+        st_s, mets_s = tr_i.run(tr_i.init(params, KEY), bx, by, rkeys)
+        np.testing.assert_allclose(
+            np.asarray(mets_s["mean_aoi"]), np.asarray(mets_b["mean_aoi"][i]),
+            rtol=1e-6, err_msg=f"grid[{i}]")
+        for a, b in zip(jax.tree_util.tree_leaves(st_s.params),
+                        jax.tree_util.tree_leaves(st_b.params)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b[i]), rtol=1e-5, atol=1e-6)
+    # different hyper-parameters must actually change the trajectory
+    aoi = np.asarray(mets_b["mean_aoi"])
+    assert not (np.array_equal(aoi[0], aoi[1]) and np.array_equal(aoi[1], aoi[2]))
