@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bandits import AoIAware, GLRCUCB, RandomScheduler
-from repro.core.channels import random_piecewise_env
+from repro.core.channels import make_scenario
 from repro.core.regret import simulate_aoi_regret, sublinearity_index
 from repro.data import FederatedLoader, make_federated_classification
 from repro.fl import AsyncFLConfig, AsyncFLTrainer
@@ -36,7 +36,13 @@ def ascii_curve(values, width=60, height=8, label=""):
 
 def main():
     print("=== 1. Non-stationary channel environment ===")
-    env = random_piecewise_env(KEY, N_CHANNELS, T, n_breakpoints=4)
+    # scenarios come from the registry: a hashable description (static
+    # structure + traced knobs) realized to a canonical env with a key.
+    # Swap "piecewise" for "gilbert_elliott" / "mobility" / "shadowing" /
+    # "jamming" to stress the schedulers under richer non-stationarity.
+    scenario = make_scenario("piecewise", n_channels=N_CHANNELS, horizon=T,
+                             n_breakpoints=4)
+    env = scenario.realize(KEY)
     print(f"{N_CHANNELS} Bernoulli sub-channels, 4 hidden breakpoints, "
           f"T={T} rounds, {N_CLIENTS} clients\n")
 
@@ -70,7 +76,8 @@ def main():
 
     cfg = AsyncFLConfig(n_clients=N_CLIENTS, n_channels=N_CHANNELS,
                         local_epochs=2, client_lr=0.08, server_lr=0.08)
-    env_fl = random_piecewise_env(jax.random.PRNGKey(3), N_CHANNELS, 200, 3)
+    env_fl = make_scenario("piecewise", n_channels=N_CHANNELS, horizon=200,
+                           n_breakpoints=3).realize(jax.random.PRNGKey(3))
     trainer = AsyncFLTrainer(
         cfg, GLRCUCB(N_CHANNELS, N_CLIENTS, history=128), env_fl, loss_fn)
     state = trainer.init(params, KEY)

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bandits import GLRCUCB, stack_params
-from repro.core.channels import random_piecewise_env
+from repro.core.channels import make_scenario
 from repro.sim import sharded_aoi_regret_batch, simulate_aoi_regret_batch
 
 KEY = jax.random.PRNGKey(7)
@@ -45,6 +45,10 @@ def main() -> None:
     ap.add_argument("--channels", type=int, default=5)
     ap.add_argument("--clients", type=int, default=2)
     ap.add_argument("--breakpoints", type=int, default=5)
+    ap.add_argument("--scenario", default="piecewise",
+                    choices=("piecewise", "gilbert_elliott", "mobility",
+                             "shadowing"),
+                    help="registry scenario family to tune against")
     ap.add_argument("--shard", action="store_true",
                     help="spread the batch over all local devices")
     args = ap.parse_args()
@@ -53,7 +57,11 @@ def main() -> None:
     gammas = np.linspace(0.5, 1.5, args.grid)
     deltas = np.logspace(-4, -1, args.grid)
     base = GLRCUCB(n, m, history=1024, detector_stride=5)
-    env = random_piecewise_env(KEY, n, t_run, args.breakpoints)
+    # registry scenario -> canonical env (swap --scenario for other families)
+    env = make_scenario(args.scenario, n_channels=n, horizon=t_run,
+                        **({"n_breakpoints": args.breakpoints}
+                           if args.scenario == "piecewise" else {})
+                        ).realize(KEY)
 
     # flatten (G*G grid) x (S seeds) into one batch: hp entries repeat per
     # seed, keys cycle per grid point

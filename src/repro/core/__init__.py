@@ -1,11 +1,15 @@
 """The paper's primary contribution: MAB channel scheduling for async FL.
 
-- channels:      non-stationary channel environments (Sec. II-B)
+- channels:      non-stationary channel scenarios (Sec. II-B) — an open
+                 registry of ChannelProcess families (piecewise, fading,
+                 mobility, shadowing, jamming, ...) lowering to two
+                 canonical jittable env forms
 - aoi:           Age-of-Information accounting (Eq. 4/8, 36-38)
 - bandits:       M-Exp3, GLR-CUCB, AoI-Aware, random, oracle (Sec. IV)
 - regret:        AoI-regret simulation harness (Eq. 14)
 - contribution:  marginal-utility estimation (Eq. 32-35, 41-43)
-- matching:      adaptive fairness-aware channel matching (Sec. V)
+- matching:      adaptive fairness-aware channel matching (Sec. V),
+                 score source routed by scenario metadata
 """
 from repro.core import aoi, channels, regret
 from repro.core.bandits import MExp3, GLRCUCB, AoIAware, RandomScheduler, oracle_assign

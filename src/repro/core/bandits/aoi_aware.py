@@ -123,3 +123,9 @@ class AoIAware(TracedHyperParams):
 
     def channel_scores(self, state: AoIAwareState, t: jnp.ndarray) -> jnp.ndarray:
         return self.base.channel_scores(state.base, t)
+
+    def mean_scores(self, state: AoIAwareState, t: jnp.ndarray) -> jnp.ndarray:
+        fn = getattr(self.base, "mean_scores", None)
+        if fn is not None:
+            return fn(state.base, t)
+        return self.base.channel_scores(state.base, t)

@@ -196,3 +196,9 @@ class GLRCUCB(TracedHyperParams):
         """UCB values (Eq. 30) rank channels for the Sec.-V matcher."""
         ucb = self.ucb(state, t)
         return jnp.where(jnp.isinf(ucb), 1e9, ucb)
+
+    def mean_scores(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
+        """Historical empirical means (Eq. 31) — the matcher's rank source
+        under ``"mean"``-hint scenarios (deterministic/adversarial), where
+        an optimism bonus carries no information."""
+        return state.mu_tilde

@@ -114,3 +114,8 @@ class MExp3(TracedHyperParams):
     def channel_scores(self, state: MExp3State, t: jnp.ndarray) -> jnp.ndarray:
         """Historical empirical mean per channel (Eq. 31)."""
         return state.mu_sum / jnp.maximum(state.pulls, 1.0)
+
+    # M-Exp3's native ranking already IS the historical mean, so the
+    # "mean"-hint routing of ``repro.core.matching.matcher_scores`` is the
+    # identity here
+    mean_scores = channel_scores

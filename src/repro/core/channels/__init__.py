@@ -1,0 +1,93 @@
+"""Non-stationary wireless channel scenarios (Sec. II-B) — an open,
+registry-driven subsystem.
+
+Layering:
+
+* ``base``      — ``ChannelEnv``: the two canonical jittable forms every
+                  scenario lowers to (``(S, N)`` segment means / ``(T, N)``
+                  per-round mean table), plus stacking/batching helpers.
+* ``process``   — ``ChannelProcess``: hashable scenario descriptions
+                  (static structure + traced scenario parameters), the
+                  family registry, and vmapped realization
+                  (``scenario_grid`` — one compiled realizer per family,
+                  grid-of-1 bitwise equal to the serial ``realize``).
+* ``families``  — the built-in families: the paper's three regimes plus
+                  Gilbert–Elliott fading, mobility drift, SNR shadowing
+                  and a composable jamming overlay.
+
+The legacy module-level API (``make_stationary`` / ``make_piecewise`` /
+``make_adversarial`` / ``random_piecewise_env`` / ``random_adversarial_env``
+/ ``stack_envs`` / ...) is re-exported unchanged — existing call sites and
+tests run as before, now through the canonical forms.
+"""
+from repro.core.channels.base import (
+    FORM_SEGMENTS,
+    FORM_TABLE,
+    ChannelEnv,
+    dense_means,
+    env_batch_size,
+    envs_stackable,
+    make_adversarial,
+    make_piecewise,
+    make_stationary,
+    scenario_realize_key,
+    segment_env,
+    stack_envs,
+    table_env,
+)
+from repro.core.channels.process import (
+    ChannelProcess,
+    example_scenario,
+    make_scenario,
+    realize_processes,
+    register_scenario,
+    registered_scenarios,
+    scenario_grid,
+)
+from repro.core.channels.families import (
+    AdversarialProcess,
+    GilbertElliottProcess,
+    JammingOverlay,
+    MobilityDriftProcess,
+    PiecewiseProcess,
+    ShadowingProcess,
+    StationaryProcess,
+    random_adversarial_env,
+    random_piecewise_env,
+)
+
+__all__ = [
+    # canonical forms
+    "ChannelEnv",
+    "FORM_SEGMENTS",
+    "FORM_TABLE",
+    "segment_env",
+    "table_env",
+    "dense_means",
+    "make_stationary",
+    "make_piecewise",
+    "make_adversarial",
+    "stack_envs",
+    "envs_stackable",
+    "env_batch_size",
+    "scenario_realize_key",
+    # scenario subsystem
+    "ChannelProcess",
+    "register_scenario",
+    "registered_scenarios",
+    "make_scenario",
+    "example_scenario",
+    "scenario_grid",
+    "realize_processes",
+    # families
+    "StationaryProcess",
+    "PiecewiseProcess",
+    "AdversarialProcess",
+    "GilbertElliottProcess",
+    "MobilityDriftProcess",
+    "ShadowingProcess",
+    "JammingOverlay",
+    # legacy generators (shims over the registry)
+    "random_piecewise_env",
+    "random_adversarial_env",
+]

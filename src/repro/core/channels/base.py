@@ -1,0 +1,270 @@
+"""Canonical channel environments (Sec. II-B) — the lowered form every
+scenario family reduces to.
+
+The spectrum is divided into ``N`` orthogonal Bernoulli sub-channels with
+state Good (1) / Bad (0).  Arbitrarily rich non-stationary scenarios
+(piecewise shifts, Markov fading, mobility drift, shadowing, jamming —
+see ``repro.core.channels.families``) all *lower* to one of exactly two
+jittable canonical forms, so ``means_at``/``sample``, the regret oracle
+and the batched ``repro.sim`` engines never branch per scenario kind:
+
+* ``"segments"`` — per-segment means ``(S, N)`` with ascending breakpoint
+  rounds ``(S-1,)``; ``mu_k(t)`` is a ``searchsorted`` gather.  S = 1 is
+  the stationary special case.
+* ``"table"``    — a precomputed per-round mean table ``(T, N)`` float32;
+  ``mu_k(t)`` is a row gather.  A {0, 1}-valued table is the adversarial
+  regime (sampling a Bernoulli with p in {0, 1} is deterministic and
+  key-independent, exactly the old behaviour).
+
+``ChannelEnv`` is a registered pytree: static structure (form + matcher
+score hint) in the aux data, arrays as children, so it can be closed over
+or passed through ``jit``/``scan``/``vmap`` freely.  ``score_kind``
+routes the Sec.-V matcher's score source (``repro.core.matching.
+matcher_scores``): ``"ucb"`` regimes rank channels by the scheduler's
+optimistic scores (Eq. 30), ``"mean"`` (deterministic/adversarial)
+regimes by historical means (Eq. 31).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FORM_SEGMENTS = "segments"
+FORM_TABLE = "table"
+
+# fold_in tag deriving a scenario-realization key from a simulation key, so
+# env draws and policy randomness never share a PRNG stream (used by the
+# sweep driver and the auto-realizing serial harness alike)
+_REALIZE_TAG = 0x5EED
+
+
+def scenario_realize_key(key: jax.Array) -> jax.Array:
+    """The realization key the engines derive from a case's simulation key."""
+    return jax.random.fold_in(key, _REALIZE_TAG)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ChannelEnv:
+    """A scenario lowered to canonical form.
+
+    Attributes
+    ----------
+    form: ``"segments"`` | ``"table"`` (static).
+    means: (S, N) per-segment Bernoulli means; a (1, N) placeholder for the
+        table form.
+    breaks: (S-1,) ascending breakpoint rounds (segment s covers
+        ``[breaks[s-1], breaks[s])``); (0,) for stationary / table.
+    table: (T, N) float32 per-round means for the table form, else a
+        (0, N) placeholder.
+    score_kind: ``"ucb"`` | ``"mean"`` (static) — which scheduler score the
+        Sec.-V matcher should rank channels by under this scenario.
+    """
+
+    form: str
+    means: jnp.ndarray
+    breaks: jnp.ndarray
+    table: jnp.ndarray
+    score_kind: str = "ucb"
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.means, self.breaks, self.table), (self.form, self.score_kind)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        means, breaks, table = children
+        return cls(aux[0], means, breaks, table, aux[1])
+
+    # -- properties --------------------------------------------------------
+    @property
+    def kind(self) -> str:
+        """Legacy regime name.  ``"stationary"``/``"piecewise"``/
+        ``"adversarial"`` keep their pre-registry values; stochastic table
+        scenarios report ``"table"``."""
+        if self.form == FORM_TABLE:
+            return "adversarial" if self.score_kind == "mean" else FORM_TABLE
+        return "stationary" if self.means.shape[-2] == 1 else "piecewise"
+
+    @property
+    def n_channels(self) -> int:
+        return self.table.shape[-1] if self.form == FORM_TABLE else self.means.shape[-1]
+
+    @property
+    def n_segments(self) -> int:
+        return self.means.shape[-2]
+
+    @property
+    def horizon(self) -> int:
+        """Table length T for the table form; segment envs extend to any t
+        (the last segment is open-ended) and report 0."""
+        return self.table.shape[-2] if self.form == FORM_TABLE else 0
+
+    # -- behaviour ---------------------------------------------------------
+    def _check_t(self, t) -> None:
+        """Fail loudly on a concrete out-of-range round for the table form.
+
+        A table env is only defined for ``t in [0, T)``; JAX's gather would
+        silently clamp ``table[t]`` to the last row for ``t >= T``, hiding
+        horizon mismatches.  Inside ``jit``/``scan``/``vmap`` the round
+        index is a tracer and the explicit ``jnp.clip`` below documents the
+        (unchanged) clamping semantics; in eager code — tests, notebooks —
+        the mismatch raises here instead of repeating the last row.
+        """
+        if isinstance(t, jax.core.Tracer):
+            return
+        tv = np.asarray(t)
+        if tv.ndim != 0:
+            return
+        horizon = self.table.shape[0]
+        if int(tv) < 0 or int(tv) >= horizon:
+            raise ValueError(
+                f"ChannelEnv.means_at/sample: round t={int(tv)} outside the "
+                f"table horizon [0, {horizon}); the scenario was realized for "
+                f"{horizon} rounds — realize it with a horizon >= the "
+                "simulation horizon"
+            )
+
+    def means_at(self, t: jnp.ndarray) -> jnp.ndarray:
+        """Instantaneous per-channel success means ``mu_k(t)`` — (N,)."""
+        if self.form == FORM_TABLE:
+            self._check_t(t)
+            t = jnp.clip(t, 0, self.table.shape[0] - 1)
+            return self.table[t]
+        if self.means.shape[0] == 1:      # stationary: no gather needed
+            return self.means[0]
+        seg = jnp.searchsorted(self.breaks, t, side="right")
+        return self.means[seg]
+
+    def sample(self, t: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
+        """Draw the Good/Bad state of all N channels in round ``t`` — (N,)
+        f32 in {0, 1}.  Deterministic tables (means in {0, 1}) are
+        key-independent: Bernoulli(0/1) has a single outcome."""
+        mu = self.means_at(t)
+        return jax.random.bernoulli(key, mu).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# canonical-form builders (+ the legacy constructors as thin shims)
+# ---------------------------------------------------------------------------
+
+def segment_env(segment_means, breakpoints=None, score_kind: str = "ucb") -> ChannelEnv:
+    """Lower to the ``(S, N)`` segment-mean canonical form."""
+    segment_means = jnp.asarray(segment_means, jnp.float32)
+    assert segment_means.ndim == 2
+    if breakpoints is None:
+        breakpoints = jnp.zeros((0,), jnp.int32)
+    breakpoints = jnp.asarray(breakpoints, jnp.int32)
+    assert breakpoints.shape[0] == segment_means.shape[0] - 1
+    return ChannelEnv(
+        form=FORM_SEGMENTS,
+        means=segment_means,
+        breaks=breakpoints,
+        table=jnp.zeros((0, segment_means.shape[1]), jnp.float32),
+        score_kind=score_kind,
+    )
+
+
+def table_env(table, score_kind: str = "ucb") -> ChannelEnv:
+    """Lower to the ``(T, N)`` per-round mean-table canonical form."""
+    table = jnp.asarray(table, jnp.float32)
+    assert table.ndim == 2
+    return ChannelEnv(
+        form=FORM_TABLE,
+        means=jnp.zeros((1, table.shape[1]), jnp.float32),
+        breaks=jnp.zeros((0,), jnp.int32),
+        table=table,
+        score_kind=score_kind,
+    )
+
+
+def make_stationary(mus) -> ChannelEnv:
+    """Fixed unknown means ``mu_k`` — the S = 1 segment form."""
+    mus = jnp.asarray(mus, jnp.float32)
+    return segment_env(mus[None, :])
+
+
+def make_piecewise(segment_means, breakpoints) -> ChannelEnv:
+    """``segment_means``: (S, N); ``breakpoints``: (S-1,) ascending rounds."""
+    return segment_env(segment_means, breakpoints)
+
+
+def make_adversarial(table) -> ChannelEnv:
+    """``table``: (T, N) 0/1 pre-determined state sequence (the M-Exp3
+    regime).  Lowered to a deterministic mean table; the matcher ranks by
+    historical means (``score_kind="mean"``, Eq. 31) since a per-round UCB
+    carries no information against an adversary."""
+    table = jnp.asarray(table)
+    return table_env(table.astype(jnp.float32), score_kind="mean")
+
+
+def dense_means(env: ChannelEnv, horizon: int) -> jnp.ndarray:
+    """Expand an (unbatched) env to its dense ``(horizon, N)`` mean table.
+
+    The overlay scenarios (jamming) compose on this form.  Segment envs
+    expand to any horizon (the last segment is open-ended); a table env
+    must have been realized for at least ``horizon`` rounds.
+    """
+    if env.form == FORM_TABLE:
+        if env.table.shape[0] < horizon:
+            raise ValueError(
+                f"dense_means: table horizon {env.table.shape[0]} < requested "
+                f"{horizon}")
+        return env.table[:horizon]
+    if env.means.shape[0] == 1:
+        return jnp.broadcast_to(env.means[0], (horizon, env.means.shape[1]))
+    seg = jnp.searchsorted(env.breaks, jnp.arange(horizon), side="right")
+    return env.means[seg]
+
+
+# ---------------------------------------------------------------------------
+# batching helpers (the `repro.sim` engine vmaps over stacked envs)
+# ---------------------------------------------------------------------------
+
+def envs_stackable(envs) -> bool:
+    """True iff the envs share canonical form, score hint and per-leaf
+    shapes (one vmappable bucket).  Scenario *family* is irrelevant: a
+    Gilbert–Elliott table and a jammed-piecewise table of the same (T, N)
+    stack — that is what lets a mixed-family scenario grid run as one
+    compiled program."""
+    first = envs[0]
+    sig = jax.tree_util.tree_map(jnp.shape, first)
+    for e in envs[1:]:
+        if e.form != first.form or e.score_kind != first.score_kind:
+            return False
+        if jax.tree_util.tree_map(jnp.shape, e) != sig:
+            return False
+    return True
+
+
+def stack_envs(envs) -> ChannelEnv:
+    """Stack same-form/same-shape envs on a new leading batch axis.
+
+    The result is a ``ChannelEnv`` whose array leaves carry a leading batch
+    dimension — NOT directly usable with ``sample``/``means_at``; it is the
+    vmap input format consumed by ``repro.sim.simulate_aoi_regret_batch``
+    (each vmap slice sees an ordinary unbatched env).
+    """
+    if not envs:
+        raise ValueError("stack_envs: empty env list")
+    if not envs_stackable(list(envs)):
+        kinds = sorted({e.kind for e in envs})
+        raise ValueError(
+            f"stack_envs: envs must share kind (canonical form + score hint) "
+            f"and leaf shapes (kinds={kinds}); "
+            "group heterogeneous cases with repro.sim.sweep instead"
+        )
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *envs)
+
+
+def env_batch_size(env: ChannelEnv) -> int:
+    """Leading batch dim of a stacked env; 1 for an unbatched env.
+
+    Unbatched envs carry 2-D ``means``/``table`` leaves ((S, N) / (T, N));
+    ``stack_envs`` adds one leading axis.
+    """
+    lead = env.table.shape if env.form == FORM_TABLE else env.means.shape
+    return 1 if len(lead) == 2 else lead[0]

@@ -1,0 +1,428 @@
+"""Built-in scenario families (Sec. II-B regimes + related-work-inspired
+channel-uncertainty models).
+
+The paper evaluates three regimes (stationary / piecewise-stationary /
+adversarial); the related work the comparison must stand against models
+richer channel uncertainty — imperfect CSI (Pase et al., 2021), jointly
+uncertain client/channel dynamics (Wadu et al., 2020).  Every family here
+is a registered ``ChannelProcess`` (see ``process.py``): static structure
++ traced scenario parameters, lowering to a canonical ``ChannelEnv``.
+
+  stationary       fixed unknown means                         (segments)
+  piecewise        abrupt mean changes at hidden breakpoints   (segments)
+  adversarial      pre-committed Markov-flip Good/Bad table    (table, det)
+  gilbert_elliott  two-state Markov fading per channel         (table)
+  mobility         smooth sinusoidal mean drift (user motion)  (table)
+  shadowing        SNR-threshold shadowing, AR(1) log-normal   (table)
+  jamming          bursty jammer overlay on ANY base scenario  (table)
+
+The jamming overlay composes: it realizes its base scenario, expands it
+to the dense per-round mean table, and multiplicatively suppresses the
+targeted channels while the (Markov on/off) jammer is active — so it can
+never raise a mean above the base (property-tested).
+
+The legacy ``random_piecewise_env`` / ``random_adversarial_env``
+generators are thin shims over the matching families.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.channels.base import (
+    FORM_SEGMENTS,
+    FORM_TABLE,
+    ChannelEnv,
+    dense_means,
+    segment_env,
+    table_env,
+)
+from repro.core.channels.process import ChannelProcess, register_scenario
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class StationaryProcess(ChannelProcess):
+    """Fixed unknown means drawn uniformly in [mean_low, mean_high]."""
+
+    n_channels: int
+    mean_low: float = 0.1
+    mean_high: float = 0.9
+
+    FAMILY = "stationary"
+    FORM = FORM_SEGMENTS
+    TRACED = ("mean_low", "mean_high")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        mus = jax.random.uniform(
+            key, (self.n_channels,), minval=sp["mean_low"],
+            maxval=sp["mean_high"])
+        return segment_env(mus[None, :])
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "StationaryProcess":
+        return cls(n_channels=n_channels)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class PiecewiseProcess(ChannelProcess):
+    """Piecewise-stationary means with ``n_breakpoints`` abrupt changes
+    (the GLR-CUCB scenario).
+
+    Segment means are drawn uniformly in [mean_low, mean_high] with
+    channels kept at least ``min_gap`` apart in expectation so an M-best
+    set exists.  Breakpoints are evenly spread with random jitter and
+    forced *strictly* ascending inside (0, T).
+    """
+
+    n_channels: int
+    horizon: int
+    n_breakpoints: int
+    mean_low: float = 0.1
+    mean_high: float = 0.9
+    min_gap: float = 0.05
+
+    FAMILY = "piecewise"
+    FORM = FORM_SEGMENTS
+    TRACED = ("mean_low", "mean_high", "min_gap")
+
+    @property
+    def n_segments(self) -> int:
+        return self.n_breakpoints + 1
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        n_channels, horizon = self.n_channels, self.horizon
+        n_breakpoints = self.n_breakpoints
+        mean_low, mean_high = sp["mean_low"], sp["mean_high"]
+        k1, k2 = jax.random.split(key)
+        n_seg = n_breakpoints + 1
+        means = jax.random.uniform(
+            k1, (n_seg, n_channels), minval=mean_low, maxval=mean_high
+        )
+        # nudge channels apart: deterministic per-channel offsets, centered so
+        # the pool stays inside the band, then clipped.  NOT wrapped —
+        # (X + c) mod span is uniform again, which would erase the separation;
+        # an additive offset keeps E[mu_k] - E[mu_j] = (k - j) * min_gap up to
+        # edge clipping.
+        offs = jnp.linspace(
+            0.0, sp["min_gap"] * n_channels, n_channels, endpoint=False)
+        means = jnp.clip(
+            means + (offs - jnp.mean(offs))[None, :], mean_low, mean_high)
+        if n_breakpoints > 0:
+            assert n_breakpoints < horizon
+            # evenly spread breakpoints with random jitter, strictly inside
+            # (0, T) and strictly ascending: sort, then lift duplicates with a
+            # cummax on (brk - i) — the identity whenever the draw was already
+            # strict, so typical realizations match the pre-strictness ones
+            brk = jnp.clip(
+                jnp.asarray(np.linspace(0, horizon, n_seg + 1)[1:-1])
+                + jax.random.uniform(
+                    k2, (n_breakpoints,), minval=-0.25, maxval=0.25
+                ) * (horizon / n_seg),
+                1, horizon - 1,
+            ).astype(jnp.int32)
+            i = jnp.arange(n_breakpoints, dtype=jnp.int32)
+            brk = jax.lax.cummax(jnp.sort(brk) - i) + i
+            brk = jnp.clip(brk, 1 + i, horizon - n_breakpoints + i)
+        else:
+            brk = jnp.zeros((0,), jnp.int32)
+        return segment_env(means, brk)
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "PiecewiseProcess":
+        return cls(n_channels=n_channels, horizon=horizon, n_breakpoints=3)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class AdversarialProcess(ChannelProcess):
+    """An 'extremely non-stationary' regime: a pre-committed Markov-flipping
+    Good/Bad table.
+
+    The adversary pre-commits the full (T, N) table; states persist but
+    flip with probability ``flip_prob`` per round per channel, starting
+    from a random assignment with ``good_frac`` channels Good.  No
+    per-round i.i.d. structure — exactly the regime where only
+    adversarial-bandit guarantees (M-Exp3) apply, hence the ``"mean"``
+    matcher score hint (Eq. 31).
+    """
+
+    n_channels: int
+    horizon: int
+    flip_prob: float = 0.01
+    good_frac: float = 0.5
+
+    FAMILY = "adversarial"
+    FORM = FORM_TABLE
+    SCORE_KIND = "mean"
+    TRACED = ("flip_prob", "good_frac")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        k0, k1 = jax.random.split(key)
+        start = jax.random.bernoulli(k0, sp["good_frac"], (self.n_channels,))
+        flips = jax.random.bernoulli(
+            k1, sp["flip_prob"], (self.horizon, self.n_channels))
+        # state_t = start XOR (cumulative parity of flips up to t)
+        parity = jnp.cumsum(flips.astype(jnp.int32), axis=0) % 2
+        table = jnp.logical_xor(start[None, :], parity.astype(bool))
+        return table_env(table.astype(jnp.float32), score_kind="mean")
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "AdversarialProcess":
+        return cls(n_channels=n_channels, horizon=horizon)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class GilbertElliottProcess(ChannelProcess):
+    """Gilbert–Elliott two-state Markov fading, independently per channel.
+
+    Each channel hops between a Good state (success mean ``mu_good``) and a
+    Bad/deep-fade state (``mu_bad``) with transition probabilities
+    ``p_gb`` (Good->Bad) and ``p_bg`` (Bad->Good) per round — the classic
+    bursty-fading model.  Lowered to a (T, N) mean table; the states are
+    latent, so the regime stays stochastic ("ucb" scores).
+    """
+
+    n_channels: int
+    horizon: int
+    p_gb: float = 0.05
+    p_bg: float = 0.10
+    mu_good: float = 0.9
+    mu_bad: float = 0.1
+
+    FAMILY = "gilbert_elliott"
+    FORM = FORM_TABLE
+    TRACED = ("p_gb", "p_bg", "mu_good", "mu_bad")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        k0, k1 = jax.random.split(key)
+        # start from the chain's stationary distribution so short horizons
+        # aren't biased toward one state
+        p_good0 = sp["p_bg"] / jnp.maximum(sp["p_gb"] + sp["p_bg"], 1e-9)
+        good0 = jax.random.bernoulli(k0, p_good0, (self.n_channels,))
+        u = jax.random.uniform(k1, (self.horizon, self.n_channels))
+
+        def step(good, u_t):
+            good = jnp.where(good, u_t >= sp["p_gb"], u_t < sp["p_bg"])
+            return good, good
+
+        _, good = jax.lax.scan(step, good0, u)
+        table = jnp.where(good, jnp.clip(sp["mu_good"], 0.0, 1.0),
+                          jnp.clip(sp["mu_bad"], 0.0, 1.0))
+        return table_env(table)
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "GilbertElliottProcess":
+        return cls(n_channels=n_channels, horizon=horizon)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class MobilityDriftProcess(ChannelProcess):
+    """Smoothly drifting means — users moving through the coverage area.
+
+    Channel k's success mean follows a sinusoid of traced ``period`` and
+    ``amplitude`` around a per-channel random center in
+    [center_low, center_high], with a random phase per channel.  Unlike the
+    piecewise regime there are no abrupt breakpoints: the non-stationarity
+    is continuous, the case the GLR detector is *not* tuned for.
+    """
+
+    n_channels: int
+    horizon: int
+    period: float = 1000.0
+    amplitude: float = 0.3
+    center_low: float = 0.25
+    center_high: float = 0.75
+
+    FAMILY = "mobility"
+    FORM = FORM_TABLE
+    TRACED = ("period", "amplitude", "center_low", "center_high")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        k0, k1 = jax.random.split(key)
+        center = jax.random.uniform(
+            k0, (self.n_channels,), minval=sp["center_low"],
+            maxval=sp["center_high"])
+        phase = jax.random.uniform(k1, (self.n_channels,))
+        t = jnp.arange(self.horizon, dtype=jnp.float32)[:, None]
+        wave = jnp.sin(2.0 * jnp.pi * (t / jnp.maximum(sp["period"], 1.0)
+                                       + phase[None, :]))
+        table = jnp.clip(center[None, :] + sp["amplitude"] * wave, 0.01, 0.99)
+        return table_env(table)
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "MobilityDriftProcess":
+        return cls(n_channels=n_channels, horizon=horizon)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class ShadowingProcess(ChannelProcess):
+    """SNR-threshold shadowing: slow log-normal fading around a per-channel
+    link margin.
+
+    Channel k carries a static SNR margin (dB over the decode threshold)
+    drawn in [margin_low, margin_high]; an AR(1) shadowing process
+    (coefficient ``rho``, innovation scale ``sigma_db``) wanders around it,
+    and the per-round success mean is the probability the instantaneous
+    margin clears the threshold, ``Phi((margin + shadow) / slope_db)`` —
+    the imperfect-CSI regime of Pase et al. (2021).
+    """
+
+    n_channels: int
+    horizon: int
+    rho: float = 0.95
+    sigma_db: float = 4.0
+    margin_low: float = -4.0
+    margin_high: float = 8.0
+    slope_db: float = 4.0
+
+    FAMILY = "shadowing"
+    FORM = FORM_TABLE
+    TRACED = ("rho", "sigma_db", "margin_low", "margin_high", "slope_db")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        k0, k1 = jax.random.split(key)
+        margin = jax.random.uniform(
+            k0, (self.n_channels,), minval=sp["margin_low"],
+            maxval=sp["margin_high"])
+        eps = jax.random.normal(k1, (self.horizon, self.n_channels))
+        rho = jnp.clip(sp["rho"], 0.0, 0.999)
+        innov = jnp.sqrt(1.0 - rho * rho) * sp["sigma_db"]
+
+        def step(x, e):
+            x = rho * x + innov * e
+            return x, x
+
+        _, shadow = jax.lax.scan(step, jnp.zeros((self.n_channels,)), eps)
+        table = jax.scipy.stats.norm.cdf(
+            (margin[None, :] + shadow) / jnp.maximum(sp["slope_db"], 1e-3))
+        return table_env(jnp.clip(table, 0.0, 1.0))
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "ShadowingProcess":
+        return cls(n_channels=n_channels, horizon=horizon)
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class JammingOverlay(ChannelProcess):
+    """Bursty jamming/attack overlay, composable onto ANY base scenario.
+
+    The base scenario is realized and expanded to its dense (T, N) mean
+    table; a Markov on/off jammer (burst entry rate ``jam_on``, exit rate
+    ``jam_off``) multiplicatively suppresses ``n_jammed`` randomly-chosen
+    channels by factor ``(1 - strength)`` while active.  Suppression is
+    multiplicative with strength clipped to [0, 1], so the overlay can
+    NEVER raise a mean above the base scenario's (property-tested:
+    ``strength=0`` reproduces the base table exactly).
+    """
+
+    base: ChannelProcess
+    horizon: int = 0               # 0: inherit the base scenario's horizon
+    n_jammed: int = 0              # 0: max(1, n_channels // 3)
+    jam_on: float = 0.02
+    jam_off: float = 0.15
+    strength: float = 0.9
+
+    FAMILY = "jamming"
+    FORM = FORM_TABLE
+    TRACED = ("jam_on", "jam_off", "strength")
+
+    def __post_init__(self):
+        if self.horizon == 0 and not getattr(self.base, "horizon", 0):
+            raise ValueError(
+                "JammingOverlay: base scenario has no horizon (e.g. "
+                "stationary); pass an explicit horizon=")
+
+    @property
+    def n_channels(self) -> int:
+        return self.base.n_channels
+
+    @property
+    def _horizon(self) -> int:
+        return self.horizon if self.horizon else self.base.horizon
+
+    @property
+    def _n_jammed(self) -> int:
+        return self.n_jammed if self.n_jammed else max(1, self.n_channels // 3)
+
+    def env_signature(self):
+        return (FORM_TABLE, self._horizon, self.n_channels, self.SCORE_KIND)
+
+    def params(self):
+        """Overlay knobs plus the base scenario's params nested under
+        "base" (the ``AoIAware`` wrapped-policy idiom)."""
+        sp = super().params()
+        base_sp = self.base.params()
+        if base_sp:
+            sp["base"] = base_sp
+        return sp
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        n, horizon = self.n_channels, self._horizon
+        kb, kj, kt = jax.random.split(key, 3)
+        base_env = self.base._realize(
+            kb, sp.get("base", self.base.params()) if isinstance(sp, dict)
+            else self.base.params())
+        mu = dense_means(base_env, horizon)
+
+        u = jax.random.uniform(kj, (horizon,))
+
+        def step(on, u_t):
+            on = jnp.where(on, u_t >= sp["jam_off"], u_t < sp["jam_on"])
+            return on, on
+
+        _, on = jax.lax.scan(step, jnp.zeros((), bool), u)
+        targets = jax.random.permutation(kt, n)[: self._n_jammed]
+        mask = jnp.zeros((n,), jnp.float32).at[targets].set(1.0)
+        strength = jnp.clip(sp["strength"], 0.0, 1.0)
+        table = mu * (1.0 - strength * on.astype(jnp.float32)[:, None]
+                      * mask[None, :])
+        return table_env(table)
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "JammingOverlay":
+        return cls(base=PiecewiseProcess.example(n_channels, horizon))
+
+
+# ---------------------------------------------------------------------------
+# legacy random scenario generators — thin shims over the registry families
+# ---------------------------------------------------------------------------
+
+def random_piecewise_env(
+    key: jax.Array,
+    n_channels: int,
+    horizon: int,
+    n_breakpoints: int,
+    mean_low: float = 0.1,
+    mean_high: float = 0.9,
+    min_gap: float = 0.05,
+) -> ChannelEnv:
+    """``PiecewiseProcess(...).realize(key)`` — kept for existing call
+    sites; new code should build the process (grids, sweeps, FL) and
+    realize explicitly."""
+    return PiecewiseProcess(
+        n_channels=n_channels, horizon=horizon, n_breakpoints=n_breakpoints,
+        mean_low=mean_low, mean_high=mean_high, min_gap=min_gap,
+    ).realize(key)
+
+
+def random_adversarial_env(
+    key: jax.Array,
+    n_channels: int,
+    horizon: int,
+    flip_prob: float = 0.01,
+    good_frac: float = 0.5,
+) -> ChannelEnv:
+    """``AdversarialProcess(...).realize(key)`` — legacy shim."""
+    return AdversarialProcess(
+        n_channels=n_channels, horizon=horizon, flip_prob=flip_prob,
+        good_frac=good_frac,
+    ).realize(key)

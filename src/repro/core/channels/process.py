@@ -1,0 +1,256 @@
+"""``ChannelProcess`` — open, registry-driven scenario descriptions.
+
+A *scenario* is a frozen, hashable dataclass splitting — exactly like the
+scheduler configs of ``repro.core.bandits.base`` — into
+
+* **static structure** (``n_channels``, ``horizon``, segment counts, which
+  channels a jammer targets, ...): Python values that size arrays and
+  drive trace-time control flow, and
+* **traced scenario parameters** (fade rates, drift amplitudes, jam
+  strengths, ...): f32 scalars that only enter the numerics, declared via
+  the reused ``TracedHyperParams`` mixin (``params()`` /
+  ``replace_traced()`` / ``hp_signature()``).
+
+``realize(key)`` lowers a scenario to a canonical ``ChannelEnv``
+(``"segments"`` or ``"table"`` — see ``base.py``).  The family-specific
+generator ``_realize(key, sp)`` reads every traced knob from the ``sp``
+pytree, never from ``self``, so a whole *grid* of scenario parameters
+vmaps through ONE compiled realization program per family
+(``scenario_grid``).  ``realize`` itself executes as the grid-of-1
+instance of that same program, so a serial realization is **bitwise**
+equal to the corresponding grid row by construction — the same trick the
+PR 2/3 engines use for batch-of-1 / grid-of-1 simulation parity.
+
+The registry (``register_scenario`` / ``make_scenario`` /
+``registered_scenarios``) keeps the family set open: a new scenario is a
+dataclass + ``@register_scenario``, and it immediately works in
+``repro.sim.sweep`` buckets, scenario grids, the FL trainer and the
+benchmark suite.  See ``families.py`` for the built-ins and
+``src/repro/sim/README.md`` for the how-to.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bandits.base import TracedHyperParams, stack_params
+from repro.core.channels.base import FORM_SEGMENTS, FORM_TABLE, ChannelEnv
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelProcess(TracedHyperParams):
+    """Base class: a hashable scenario description that lowers to a
+    canonical ``ChannelEnv``.
+
+    Subclasses set the class attributes and implement ``_realize``:
+
+      FAMILY      registry name (``make_scenario(FAMILY, ...)``)
+      FORM        the canonical form produced: "segments" | "table"
+      SCORE_KIND  matcher score routing for realized envs ("ucb" | "mean")
+      TRACED      traced scenario-parameter field names (the mixin contract)
+
+      _realize(key, sp)  the generator: static structure from ``self``,
+                         every traced knob from the ``sp`` pytree.
+      example(n, T)      a default instance — lets tests/benchmarks
+                         enumerate every registered family generically.
+    """
+
+    FAMILY: ClassVar[str] = ""
+    FORM: ClassVar[str] = FORM_SEGMENTS
+    SCORE_KIND: ClassVar[str] = "ucb"
+
+    # -- family contract ---------------------------------------------------
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        raise NotImplementedError
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "ChannelProcess":
+        raise NotImplementedError
+
+    # -- static canonical identity ----------------------------------------
+    @property
+    def n_segments(self) -> int:          # segment-form families override
+        return 1
+
+    def env_signature(self) -> Tuple:
+        """Static identity of the *realized* env: canonical form + shapes +
+        score hint.  Scenarios with equal signatures lower to stackable
+        envs, so the sweep driver merges them — across families — into one
+        simulation bucket per canonical form."""
+        if self.FORM == FORM_TABLE:
+            return (FORM_TABLE, self.horizon, self.n_channels, self.SCORE_KIND)
+        return (FORM_SEGMENTS, self.n_segments, self.n_channels, self.SCORE_KIND)
+
+    # -- realization -------------------------------------------------------
+    def realize(self, key: jax.Array, params=None) -> ChannelEnv:
+        """Lower to a canonical ``ChannelEnv``.
+
+        ``params`` optionally overrides the traced scenario parameters
+        (``self.params()`` pytree); ``None`` or an empty override uses the
+        instance's own values (the ``init_with_hp`` convention — an empty
+        dict must NOT select the knob-free fast path, which would bake one
+        instance's values into the family-shared realizer cache).  Runs as
+        the grid-of-1 instance of the family's vmapped realization
+        program, so the result is bitwise equal to the matching
+        ``scenario_grid`` row.
+        """
+        if params is None or not jax.tree_util.tree_leaves(params):
+            params = self.params()
+        sp = params
+        has_sp = bool(jax.tree_util.tree_leaves(sp))
+        sp1 = (jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], sp)
+               if has_sp else None)
+        out = _family_grid_fn(self, has_sp)(jnp.stack([key]), sp1)
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[ChannelProcess]] = {}
+
+
+def register_scenario(cls: Type[ChannelProcess]) -> Type[ChannelProcess]:
+    """Class decorator: add a scenario family to the registry."""
+    if not cls.FAMILY:
+        raise ValueError(f"register_scenario: {cls.__name__} has no FAMILY name")
+    if cls.FAMILY in _REGISTRY:
+        raise ValueError(f"register_scenario: duplicate family {cls.FAMILY!r}")
+    _REGISTRY[cls.FAMILY] = cls
+    return cls
+
+
+def registered_scenarios() -> Dict[str, Type[ChannelProcess]]:
+    """Name -> class for every registered scenario family (a copy)."""
+    return dict(_REGISTRY)
+
+
+def make_scenario(family: str, **kwargs) -> ChannelProcess:
+    """Construct a scenario by registry name."""
+    try:
+        cls = _REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"make_scenario: unknown family {family!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+    return cls(**kwargs)
+
+
+def example_scenario(family: str, n_channels: int, horizon: int) -> ChannelProcess:
+    """The family's default example instance (tests/benchmarks enumerate
+    the registry through this)."""
+    try:
+        cls = _REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"example_scenario: unknown family {family!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+    return cls.example(n_channels, horizon)
+
+
+# ---------------------------------------------------------------------------
+# vmapped realization: one compiled program per family
+# ---------------------------------------------------------------------------
+
+_GRID_FN_CACHE: Dict[Any, Any] = {}
+
+
+def _family_grid_fn(rep: ChannelProcess, has_sp: bool):
+    """The jitted ``(keys, stacked_sp) -> stacked ChannelEnv`` realizer,
+    cached per family *structure* (``hp_signature``): the representative's
+    own traced values never enter the trace, so every grid — and every
+    grid-of-1 ``realize`` — of one family reuses one executable."""
+    cache_key = (rep.hp_signature(), has_sp, jax.default_backend())
+    fn = _GRID_FN_CACHE.get(cache_key)
+    if fn is None:
+        def one(key, sp):
+            return rep._realize(key, rep.params() if sp is None else sp)
+
+        fn = jax.jit(jax.vmap(one, in_axes=(0, 0 if has_sp else None)))
+        _GRID_FN_CACHE[cache_key] = fn
+    return fn
+
+
+def scenario_grid(processes: Sequence[ChannelProcess], keys) -> ChannelEnv:
+    """Realize a same-family grid of scenarios as ONE vmapped program.
+
+    ``processes`` must share one ``hp_signature()`` (same family and static
+    structure; traced scenario parameters free to differ — build points
+    with ``replace_traced``).  ``keys`` is a sequence/stack of G
+    realization keys (or a single key, split G ways).  Returns a *stacked*
+    ``ChannelEnv`` (leading (G,) axis on every leaf) — the
+    ``repro.sim.simulate_aoi_regret_batch`` env-axis input format.
+
+    Grid-of-1 is bitwise equal to ``processes[0].realize(keys[0])``: both
+    execute the identical compiled program.
+    """
+    procs = list(processes)
+    if not procs:
+        raise ValueError("scenario_grid: empty process list")
+    rep = procs[0]
+    sig = rep.hp_signature()
+    for p in procs[1:]:
+        if p.hp_signature() != sig:
+            raise ValueError(
+                "scenario_grid: processes must share one family/structure "
+                f"signature; got {sig} vs {p.hp_signature()} — group "
+                "heterogeneous scenarios with repro.sim.sweep instead")
+    keys = jnp.asarray(keys) if not isinstance(keys, jnp.ndarray) else keys
+    if keys.ndim == 1:                     # a single key: split per process
+        keys = jax.random.split(keys, len(procs))
+    if keys.shape[0] != len(procs):
+        raise ValueError(
+            f"scenario_grid: {len(procs)} processes but {keys.shape[0]} keys")
+    sp = stack_params(procs)               # None for knob-free families
+    return _family_grid_fn(rep, sp is not None)(keys, sp)
+
+
+def realize_processes(processes: Sequence[ChannelProcess], keys) -> ChannelEnv:
+    """Realize a *mixed-family* list of scenarios into one stacked env.
+
+    All processes must share an ``env_signature()`` (same canonical form,
+    shapes and score hint) so the realized envs stack; the realization
+    itself groups by family structure and runs one ``scenario_grid``
+    program per family, then reassembles rows in input order.  This is the
+    sweep driver's bucket-realization path: a 12-scenario grid spanning
+    four table families realizes as four tiny vmapped programs and
+    *simulates* as one.
+    """
+    procs = list(processes)
+    if not procs:
+        raise ValueError("realize_processes: empty process list")
+    env_sig = procs[0].env_signature()
+    for p in procs[1:]:
+        if p.env_signature() != env_sig:
+            raise ValueError(
+                "realize_processes: processes must lower to one canonical "
+                f"form/shape; got {env_sig} vs {p.env_signature()} — group "
+                "heterogeneous scenarios with repro.sim.sweep instead")
+    keys = jnp.asarray(keys) if not isinstance(keys, jnp.ndarray) else keys
+    if keys.shape[0] != len(procs):
+        raise ValueError(
+            f"realize_processes: {len(procs)} processes but {keys.shape[0]} keys")
+
+    groups: Dict[Any, list] = {}
+    order = []
+    for i, p in enumerate(procs):
+        k = p.hp_signature()
+        if k not in groups:
+            groups[k] = []
+            order.append(k)
+        groups[k].append(i)
+    if len(order) == 1:
+        return scenario_grid(procs, keys)
+
+    parts = [scenario_grid([procs[i] for i in groups[k]],
+                           keys[jnp.asarray(groups[k])]) for k in order]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    flat_idx = np.concatenate([np.asarray(groups[k]) for k in order])
+    inv = np.argsort(flat_idx)             # concat row j holds case flat_idx[j]
+    return jax.tree_util.tree_map(lambda x: x[inv], stacked)

@@ -69,14 +69,19 @@ class AdaptiveMatcher:
     def match(
         self,
         state: MatcherState,
-        channels: jnp.ndarray,        # (M,) channel ids chosen by the scheduler
-        channel_scores: jnp.ndarray,  # (N,) quality scores (UCB / hist. mean)
-        contrib: jnp.ndarray,         # (M,) marginal contributions C~_i
-        aoi: jnp.ndarray,             # (M,) client AoI
+        channels: jnp.ndarray,        # (n_clients,) channel ids from the scheduler
+        channel_scores: jnp.ndarray,  # (n_channels,) quality scores — rank
+                                      # source routed per scenario regime by
+                                      # ``matcher_scores`` (UCB, Eq. 30, vs
+                                      # historical mean, Eq. 31)
+        contrib: jnp.ndarray,         # (n_clients,) per-CLIENT marginal
+                                      # contributions C~_i (NOT per-channel)
+        aoi: jnp.ndarray,             # (n_clients,) per-client AoI
     ) -> Tuple[jnp.ndarray, MatcherState]:
         """Permute ``channels`` so client i receives its priority-matched channel.
 
-        Returns (assignment (M,) — assignment[i] is client i's channel, state).
+        Returns ``(assignment, state)`` — ``assignment`` is (n_clients,);
+        ``assignment[i]`` is client i's channel.
         """
         lam, new_state = self.priorities(state, contrib, aoi)
         chan_rank = jnp.argsort(-channel_scores[channels])  # best channel first
@@ -84,3 +89,26 @@ class AdaptiveMatcher:
         assignment = jnp.zeros_like(channels)
         assignment = assignment.at[client_rank].set(channels[chan_rank])
         return assignment, new_state
+
+
+def matcher_scores(scheduler, sched_state, t: jnp.ndarray, env) -> jnp.ndarray:
+    """The (n_channels,) score vector ``AdaptiveMatcher.match`` should rank
+    channels by, routed by the scenario's metadata instead of caller
+    convention.
+
+    The paper ranks scheduled channels by UCB (Eq. 30) under the
+    stochastic regimes and by historical mean (Eq. 31) under the
+    adversarial one.  Pre-registry, every call site simply took whatever
+    ``scheduler.channel_scores`` returned — correct only because each
+    policy was run in its intended regime.  The canonical ``ChannelEnv``
+    now carries the regime hint (``score_kind``, static — set by the
+    scenario family that lowered it), so the routing is explicit:
+    ``"mean"`` regimes use the policy's ``mean_scores`` (historical means)
+    when it provides them, everything else its native ``channel_scores``.
+    The branch resolves at trace time (the hint is static metadata).
+    """
+    if getattr(env, "score_kind", "ucb") == "mean":
+        fn = getattr(scheduler, "mean_scores", None)
+        if fn is not None:
+            return fn(sched_state, t)
+    return scheduler.channel_scores(sched_state, t)

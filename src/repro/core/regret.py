@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core.aoi import init_aoi, update_aoi, aoi_variance
 from repro.core.bandits.base import init_with_hp
 from repro.core.bandits.oracle import oracle_assign
-from repro.core.channels import ChannelEnv
+from repro.core.channels import ChannelEnv, ChannelProcess, scenario_realize_key
 
 
 class SimCarry(NamedTuple):
@@ -100,6 +100,10 @@ def simulate_aoi_regret_impl(
 
 
 @partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve"))
+def _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve=True):
+    return simulate_aoi_regret_impl(scheduler, env, key, horizon, collect_curve)
+
+
 def simulate_aoi_regret(
     scheduler,
     env: ChannelEnv,
@@ -109,13 +113,21 @@ def simulate_aoi_regret(
 ) -> Dict[str, jnp.ndarray]:
     """Simulate ``scheduler`` vs the oracle for ``horizon`` rounds.
 
+    ``env`` is a canonical ``ChannelEnv``, or an unrealized
+    ``ChannelProcess`` — a scenario is then drawn with the realization key
+    the sweep driver would derive (``scenario_realize_key(key)``), so this
+    serial path and a ``repro.sim.sweep`` over the same (process, key)
+    cases compute identical environments.
+
     Returns dict with:
       regret:       (T,) cumulative AoI regret curve (or final scalar)
       aoi_pi/star:  final per-client AoI
       cum_aoi_var:  (T,) cumulative AoI variance of the policy (Fig. 4 metric)
       success_rate: overall fraction of successful transmissions
     """
-    return simulate_aoi_regret_impl(scheduler, env, key, horizon, collect_curve)
+    if isinstance(env, ChannelProcess):
+        env = env.realize(scenario_realize_key(key))
+    return _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve)
 
 
 def regret_growth_exponent(regret_curve: jnp.ndarray, burn_in: int = 100) -> float:

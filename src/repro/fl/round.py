@@ -35,7 +35,8 @@ from repro.core.contribution import (
     marginal_contribution,
     update_buffer,
 )
-from repro.core.matching import AdaptiveMatcher, MatcherState
+from repro.core.channels import ChannelProcess
+from repro.core.matching import AdaptiveMatcher, MatcherState, matcher_scores
 from repro.fl.client import local_sgd
 from repro.kernels import ops
 from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
@@ -71,9 +72,17 @@ class AsyncFLConfig:
 class AsyncFLTrainer:                          # jitted round caches per instance
     cfg: AsyncFLConfig                         # (env holds arrays -> unhashable
     scheduler: Any                 # a repro.core.bandits Scheduler   by value)
-    env: Any                       # a repro.core.channels ChannelEnv
+    env: Any                       # a repro.core.channels ChannelEnv, or an
+                                   # unrealized ChannelProcess (realized with
+                                   # PRNGKey(0) at construction; realize
+                                   # explicitly for per-seed scenario draws)
     loss_fn: Callable              # (params, x, y) -> scalar loss
     proxy_loss_fn: Optional[Callable] = None  # flat params -> scalar (Eq. 35)
+
+    def __post_init__(self):
+        if isinstance(self.env, ChannelProcess):
+            object.__setattr__(
+                self, "env", self.env.realize(jax.random.PRNGKey(0)))
 
     # ------------------------------------------------------------------ init
     def init(self, params: Any, key: jax.Array, hp: Any = None) -> AsyncFLState:
@@ -145,7 +154,11 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         channels, aux = self.scheduler.select(state.sched_state, t, k_sel, state.aoi)
         matcher = AdaptiveMatcher(cfg.matcher_beta)
         if cfg.use_matching:
-            scores = self.scheduler.channel_scores(state.sched_state, t)
+            # score source routed by the scenario's regime metadata (UCB
+            # under stochastic regimes, historical mean under "mean"-hint
+            # deterministic/adversarial ones — Eq. 30 vs Eq. 31)
+            scores = matcher_scores(
+                self.scheduler, state.sched_state, t, self.env)
             assignment, matcher_state = matcher.match(
                 state.matcher_state, channels, scores, state.contrib, state.aoi)
         else:

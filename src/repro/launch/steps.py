@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from repro.core.aoi import aoi_variance, init_aoi, update_aoi
 from repro.core.contribution import aggregation_weights
-from repro.core.matching import AdaptiveMatcher, MatcherState
+from repro.core.matching import AdaptiveMatcher, MatcherState, matcher_scores
 from repro.models.model import Model
 from repro.optim.optimizers import Optimizer, apply_updates
 
@@ -97,7 +97,8 @@ def make_fl_train_step(
 
         # ---- Step 3 (paper): schedule, match, transmit -------------------
         channels, aux = scheduler.select(fl.sched_state, t, k_sel, fl.aoi)
-        scores = scheduler.channel_scores(fl.sched_state, t)
+        # rank source routed by the scenario's regime metadata (Eq. 30 vs 31)
+        scores = matcher_scores(scheduler, fl.sched_state, t, env)
         assignment, matcher_state = matcher.match(
             fl.matcher_state, channels, scores, fl.contrib, fl.aoi)
         ch_states = env.sample(t, k_env)

@@ -4,10 +4,15 @@ Public API:
   simulate_aoi_regret_batch  vmapped regret simulation over envs x seeds
                              x hyper-parameter grids (hparams/hp_axis)
   simulate_fl_batch          vmapped AsyncFLTrainer.run over stacked seeds
-  SweepCase / FLSweepCase    heterogeneous sweep requests (regret / FL)
+  SweepCase / FLSweepCase    heterogeneous sweep requests (regret / FL);
+                             SweepCase.env takes a realized ChannelEnv or
+                             an unrealized ChannelProcess scenario (bucketed
+                             by canonical form — families merge; see
+                             repro.core.channels)
   sweep                      sweep driver (vmappable buckets, mixed cases,
-                             traced-hp merging, AOT executable cache,
-                             shard=True for device-sharded buckets)
+                             traced-hp merging, scenario realization,
+                             AOT executable cache, shard=True for
+                             device-sharded buckets)
   group_cases                bucket partitioning (exposed for tests)
   sweep_cache_stats /        executable-cache hit/miss counters
   clear_sweep_cache

@@ -37,7 +37,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.channels import ChannelEnv
+from repro.core.channels import ChannelEnv, ChannelProcess
 from repro.core.regret import simulate_aoi_regret_impl
 
 
@@ -47,7 +47,7 @@ from repro.core.regret import simulate_aoi_regret_impl
         "scheduler", "horizon", "collect_curve", "env_axis", "key_axis", "hp_axis",
     ),
 )
-def simulate_aoi_regret_batch(
+def _simulate_aoi_regret_batch_jit(
     scheduler,
     envs: ChannelEnv,
     keys: jax.Array,
@@ -93,3 +93,40 @@ def simulate_aoi_regret_batch(
 
     return jax.vmap(one, in_axes=(env_axis, key_axis, hp_axis))(
         envs, keys, hparams)
+
+
+def simulate_aoi_regret_batch(
+    scheduler,
+    envs: ChannelEnv,
+    keys: jax.Array,
+    horizon: int,
+    collect_curve: bool = True,
+    env_axis: int | None = 0,
+    key_axis: int | None = 0,
+    hparams=None,
+    hp_axis: int | None = None,
+) -> Dict[str, jnp.ndarray]:
+    """Jitted entry point — see ``_simulate_aoi_regret_batch_jit``.
+
+    ``envs`` must be *realized* (a ``ChannelEnv``, stacked or broadcast):
+    scenario descriptions lower per-family through
+    ``repro.core.channels.scenario_grid`` (or automatically inside
+    ``repro.sim.sweep``, which realizes each bucket's processes before
+    dispatching here).
+    """
+    if isinstance(envs, ChannelProcess):
+        raise TypeError(
+            "simulate_aoi_regret_batch: got an unrealized ChannelProcess; "
+            "realize it first — scenario_grid(procs, keys) for a stacked "
+            "grid, or proc.realize(key) with env_axis=None to broadcast — "
+            "or hand process cases to repro.sim.sweep, which realizes "
+            "buckets automatically")
+    return _simulate_aoi_regret_batch_jit(
+        scheduler, envs, keys, horizon, collect_curve=collect_curve,
+        env_axis=env_axis, key_axis=key_axis, hparams=hparams,
+        hp_axis=hp_axis)
+
+
+# the sweep driver AOT-compiles through .lower with this exact arg/kwarg
+# structure; delegate to the underlying jit
+simulate_aoi_regret_batch.lower = _simulate_aoi_regret_batch_jit.lower

@@ -32,6 +32,11 @@ traced hyper-parameters live in its state pytree (see
 B grid points of the same policy family — per-entry ``gamma``/``delta``/
 EMA values — through this ONE vmapped program, no engine changes needed.
 
+The channel scenario lives in the trainer too: ``AsyncFLTrainer`` takes a
+canonical ``ChannelEnv`` or any registered ``ChannelProcess`` (realized at
+construction), so every scenario family — fading, mobility, shadowing,
+jamming overlays — trains through this engine unchanged.
+
 Batch-of-1 engine output matches ``AsyncFLTrainer.run`` **bitwise**: both
 entry points execute ``AsyncFLTrainer._run_vmapped`` — ``run`` at batch 1,
 the engine at batch B — so at B = 1 the two lower the *identical* HLO

@@ -21,7 +21,10 @@ Two properties make the path safe to keep on everywhere:
   padding never fabricates inputs the policies haven't seen.
 
 ``sweep(..., shard=True)`` routes every regret bucket through here; the
-direct API below serves homogeneous batches.
+direct API below serves homogeneous batches.  Scenario-process buckets
+shard identically: the sweep driver realizes them to stacked canonical
+``ChannelEnv``s *before* the shard_map dispatch, so the sharded program
+never sees a scenario family — only the two canonical forms.
 """
 from __future__ import annotations
 

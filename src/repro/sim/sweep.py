@@ -22,6 +22,13 @@ two grids with different scalar values — reuse the executable instead of
 re-lowering.  ``sweep_cache_stats()`` exposes hit/miss counts (the
 benchmark harness reports them in ``BENCH_sim.json``).
 
+Scenario processes (``repro.core.channels.ChannelProcess``) drop into
+``SweepCase.env`` unrealized: cases bucket by the scenario's canonical-form
+signature — families merge — and the bucket runner realizes them (one
+vmapped ``scenario_grid`` program per family) before the ONE compiled
+simulation runs.  A 12-scenario × S-seed grid spanning four table-form
+families is one simulation bucket.
+
 ``sweep(..., shard=True)`` distributes every regret bucket's batch axis
 over a 1-D device mesh via ``repro.sim.shard`` (``shard_map``; buckets are
 embarrassingly parallel).  On a single device the sharded program is
@@ -46,7 +53,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bandits.base import stack_params
-from repro.core.channels import ChannelEnv, stack_envs
+from repro.core.channels import (
+    ChannelEnv,
+    ChannelProcess,
+    realize_processes,
+    scenario_realize_key,
+    stack_envs,
+)
 from repro.sim import shard as _shard
 from repro.sim.engine import simulate_aoi_regret_batch
 from repro.sim.fl_batch import simulate_fl_batch
@@ -54,11 +67,21 @@ from repro.sim.fl_batch import simulate_fl_batch
 
 @dataclasses.dataclass(frozen=True)
 class SweepCase:
-    """One (name, scheduler, env, key, horizon) simulation request."""
+    """One (name, scheduler, env, key, horizon) simulation request.
+
+    ``env`` is a realized ``ChannelEnv`` or an unrealized
+    ``ChannelProcess`` scenario.  Process cases bucket by the scenario's
+    *canonical-form signature* (``env_signature()``), not its family: a
+    mixed grid of Gilbert–Elliott / mobility / shadowing / jamming
+    scenarios of one (T, N) lands in ONE simulation bucket (realization
+    runs per family through ``scenario_grid`` — one tiny vmapped program
+    each), with the scenario drawn from ``scenario_realize_key(key)``,
+    matching what ``simulate_aoi_regret`` derives on the serial path.
+    """
 
     name: str
     scheduler: Any
-    env: ChannelEnv
+    env: Any                     # ChannelEnv | ChannelProcess
     key: jax.Array
     horizon: int
 
@@ -116,8 +139,13 @@ def _bucket_key(case):
     if isinstance(case, FLSweepCase):
         return ("fl", case.trainer, _tree_sig(case.params),
                 _tree_sig((case.batches_x, case.batches_y, case.round_keys)))
-    return ("regret", _sched_sig(case.scheduler), case.horizon,
-            _tree_sig(case.env))
+    # scenario processes bucket by canonical form + shapes, NOT family:
+    # same-signature scenarios realize to stackable envs, so one compiled
+    # simulation serves every family of that form
+    env_sig = (("scenario",) + case.env.env_signature()
+               if isinstance(case.env, ChannelProcess)
+               else _tree_sig(case.env))
+    return ("regret", _sched_sig(case.scheduler), case.horizon, env_sig)
 
 
 def group_cases(cases: Sequence[Any]) -> List[List[Any]]:
@@ -178,7 +206,16 @@ def _mesh_desc(mesh) -> Any:
 # ---------------------------------------------------------------------------
 
 def _run_regret_bucket(bucket, collect_curve: bool, block: bool, mesh=None):
-    envs = stack_envs([c.env for c in bucket])
+    if isinstance(bucket[0].env, ChannelProcess):
+        # realize the bucket's scenarios (grouped per family into vmapped
+        # scenario_grid programs) from keys derived exactly as the serial
+        # harness derives them — sweep results match per-case
+        # simulate_aoi_regret(sched, process, key, T) bitwise
+        envs = realize_processes(
+            [c.env for c in bucket],
+            jnp.stack([scenario_realize_key(c.key) for c in bucket]))
+    else:
+        envs = stack_envs([c.env for c in bucket])
     keys = jnp.stack([c.key for c in bucket])
     # merge traced scalars: one (B,)-stacked params() pytree for the bucket;
     # the representative scheduler's own traced values never reach the

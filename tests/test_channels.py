@@ -85,6 +85,44 @@ def test_random_adversarial_env_flip_rate():
     assert 0.004 < flips < 0.02         # ~flip_prob per channel per round
 
 
+def test_table_env_out_of_range_t_fails_loudly():
+    """Regression: ``table[t]`` silently clamps for ``t >= T`` under JAX
+    gather semantics, so a horizon mismatch used to repeat the last row
+    forever.  Eager (concrete-t) access must now raise; traced access
+    keeps the documented explicit-clip semantics (scan carries cannot
+    raise data-dependently)."""
+    table = (np.arange(20)[:, None] % 2 == np.arange(3)[None, :] % 2)
+    env = make_adversarial(table.astype(np.uint8))
+    k = jax.random.PRNGKey(0)
+    for bad_t in (20, 21, 10_000, -1):
+        with pytest.raises(ValueError, match="outside the table horizon"):
+            env.means_at(jnp.array(bad_t))
+        with pytest.raises(ValueError, match="outside the table horizon"):
+            env.sample(jnp.array(bad_t), k)
+    # in-range eager access still works
+    np.testing.assert_array_equal(
+        np.asarray(env.means_at(jnp.array(19))), table[19].astype(np.float32))
+    # traced t: explicit clip to the last row (documented scan semantics)
+    jitted = jax.jit(lambda t: env.means_at(t))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(jnp.array(500))), table[19].astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(jnp.array(-3))), table[0].astype(np.float32))
+
+
+def test_piecewise_breaks_strictly_ascending():
+    """The segment form requires strictly ascending breakpoints inside
+    (0, T) — equal breakpoints would create zero-length segments the
+    searchsorted gather silently skips.  Exercise a cramped configuration
+    (many breakpoints on a short horizon) where the pre-fix generator
+    produced duplicates."""
+    for seed in range(8):
+        env = random_piecewise_env(jax.random.PRNGKey(seed), 4, 60, 12)
+        brk = np.asarray(env.breaks)
+        assert (np.diff(brk) > 0).all(), f"seed {seed}: {brk}"
+        assert brk.min() >= 1 and brk.max() <= 59
+
+
 def test_env_is_jittable_through_scan():
     env = random_piecewise_env(jax.random.PRNGKey(0), 4, 100, 2)
 

@@ -1,0 +1,151 @@
+"""Property-based scenario-generator invariants, over ALL registered
+families.
+
+Every scenario family in the ``repro.core.channels`` registry — the
+paper's three regimes plus the fading/mobility/shadowing/jamming
+additions, and any family a future PR registers — must uphold the
+canonical-form contract of ``repro.core.channels.base``:
+
+  * realized means live in [0, 1] (they are Bernoulli parameters);
+  * segment-form envs carry strictly ascending breakpoints inside (0, T);
+  * table-form envs carry a float32 ``(horizon, N)`` table;
+  * same-family realizations stack (``stack_envs``) and round-trip
+    (``env_batch_size``, per-row slices bitwise equal to the serial
+    realizations);
+  * the jamming overlay composes onto every base family without ever
+    raising a mean above the base scenario's (suppression is
+    multiplicative) — and never above 1;
+  * ``scenario_grid`` rows are bitwise equal to the serial ``realize``
+    (the grid-of-1/PR 3 invariant, here for G = 2).
+
+The suite runs under the deterministic ``hypothesis`` stub registered in
+``tests/conftest.py`` (container without hypothesis) and under the real
+hypothesis package (CI installs it) — the strategies used here are the
+subset both implement.  Families are drawn via ``sampled_from`` rather
+than ``pytest.mark.parametrize`` because the stub's ``given`` wrapper
+exposes a zero-argument signature.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channels import (
+    FORM_SEGMENTS,
+    FORM_TABLE,
+    JammingOverlay,
+    dense_means,
+    env_batch_size,
+    example_scenario,
+    registered_scenarios,
+    scenario_grid,
+    stack_envs,
+)
+
+N, T = 5, 48       # one (N, T) for the whole suite: realizer jit caches stay warm
+
+FAMILIES = sorted(registered_scenarios())
+
+
+def _key(seed: int) -> jax.Array:
+    return jax.random.PRNGKey(seed)
+
+
+def _leaves_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def test_registry_covers_the_paper_and_beyond():
+    # the three paper regimes plus >= 4 richer families must stay registered
+    assert {"stationary", "piecewise", "adversarial"} <= set(FAMILIES)
+    extra = set(FAMILIES) - {"stationary", "piecewise", "adversarial"}
+    assert len(extra) >= 4, FAMILIES
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+def test_realized_means_in_unit_interval(family, seed):
+    env = example_scenario(family, N, T).realize(_key(seed))
+    assert np.all(np.asarray(env.means) >= 0.0)
+    assert np.all(np.asarray(env.means) <= 1.0)
+    assert np.all(np.asarray(env.table) >= 0.0)
+    assert np.all(np.asarray(env.table) <= 1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+def test_canonical_form_shapes_and_dtypes(family, seed):
+    proc = example_scenario(family, N, T)
+    env = proc.realize(_key(seed))
+    assert env.form in (FORM_SEGMENTS, FORM_TABLE)
+    assert (env.form, env.horizon if env.form == FORM_TABLE else env.n_segments,
+            env.n_channels, env.score_kind) == proc.env_signature()
+    if env.form == FORM_TABLE:
+        assert env.table.shape == (T, N)
+        assert env.table.dtype == jnp.float32
+        assert env.means.shape == (1, N)          # placeholder
+    else:
+        assert env.means.shape[-1] == N
+        assert env.means.dtype == jnp.float32
+        assert env.table.shape == (0, N)          # placeholder
+        assert env.breaks.shape == (env.n_segments - 1,)
+        brk = np.asarray(env.breaks)
+        if brk.size:
+            assert (np.diff(brk) > 0).all(), f"breaks not strictly ascending: {brk}"
+            assert brk.min() >= 1 and brk.max() <= T - 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+def test_stack_envs_round_trip(family, seed):
+    proc = example_scenario(family, N, T)
+    envs = [proc.realize(_key(seed + i)) for i in range(2)]
+    stacked = stack_envs(envs)
+    assert env_batch_size(stacked) == 2
+    assert env_batch_size(envs[0]) == 1
+    for i, e in enumerate(envs):
+        row = jax.tree_util.tree_map(lambda x, i=i: x[i], stacked)
+        assert _leaves_equal(e, row)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1),
+       st.floats(0.1, 2.0))
+def test_jamming_overlay_never_raises_means(family, seed, strength):
+    """Composable onto ANY base family; multiplicative suppression can only
+    lower means (strength is clipped to [0, 1] inside the trace, so even
+    out-of-range grid values cannot amplify a channel)."""
+    base = example_scenario(family, N, T)
+    key = _key(seed)
+    jam = JammingOverlay(base=base, horizon=T, strength=strength)
+    off = JammingOverlay(base=base, horizon=T, strength=0.0)
+    jammed = np.asarray(jam.realize(key).table)
+    unjammed = np.asarray(off.realize(key).table)   # == dense base means
+    assert jammed.shape == unjammed.shape == (T, N)
+    assert (jammed <= unjammed + 1e-7).all()
+    assert (jammed <= 1.0).all() and (jammed >= 0.0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+def test_scenario_grid_rows_match_serial_realize(family, seed):
+    proc = example_scenario(family, N, T)
+    keys = jax.random.split(_key(seed), 2)
+    grid = scenario_grid([proc, proc], keys)
+    assert env_batch_size(grid) == 2
+    for i in range(2):
+        row = jax.tree_util.tree_map(lambda x, i=i: x[i], grid)
+        assert _leaves_equal(proc.realize(keys[i]), row)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+def test_dense_means_matches_means_at(family, seed):
+    env = example_scenario(family, N, T).realize(_key(seed))
+    dense = dense_means(env, T)
+    assert dense.shape == (T, N)
+    for t in (0, T // 2, T - 1):
+        np.testing.assert_array_equal(
+            np.asarray(dense[t]), np.asarray(env.means_at(jnp.array(t))))

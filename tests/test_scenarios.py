@@ -1,0 +1,223 @@
+"""Scenario subsystem integration: registry <-> sweep <-> engines.
+
+Covers the PR's acceptance contract:
+  * a mixed-family scenario grid buckets into ONE compiled simulation per
+    canonical form (families merge on the env signature);
+  * sweep results over process cases are bitwise equal to the serial
+    ``simulate_aoi_regret(sched, process, key, T)`` path (grid-of-1 and
+    grid-of-many);
+  * the legacy ``random_*_env`` shims realize bitwise-identically to the
+    registry families they wrap;
+  * unrealized processes are rejected with guidance by the raw batch
+    engine, and accepted (auto-realized) by ``AsyncFLTrainer``;
+  * the Sec.-V matcher score routing follows the scenario's metadata.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB, MExp3
+from repro.core.channels import (
+    AdversarialProcess,
+    GilbertElliottProcess,
+    JammingOverlay,
+    MobilityDriftProcess,
+    PiecewiseProcess,
+    ShadowingProcess,
+    make_stationary,
+    random_adversarial_env,
+    random_piecewise_env,
+    scenario_grid,
+)
+from repro.core.matching import matcher_scores
+from repro.core.regret import simulate_aoi_regret
+from repro.sim import SweepCase, group_cases, simulate_aoi_regret_batch, sweep
+
+KEY = jax.random.PRNGKey(0)
+N, M, T = 5, 2, 300
+
+
+def _table_scenarios():
+    """One scenario per table family, same (T, N) — a mixed-family grid."""
+    return [
+        GilbertElliottProcess(N, T, p_gb=0.03),
+        MobilityDriftProcess(N, T, amplitude=0.25),
+        ShadowingProcess(N, T, rho=0.9),
+        JammingOverlay(base=PiecewiseProcess(N, T, 2), strength=0.8),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# bucketing: families merge per canonical form
+# ---------------------------------------------------------------------------
+
+def test_mixed_family_scenarios_share_one_bucket():
+    s = GLRCUCB(N, M, history=32, detector_stride=4)
+    cases = [SweepCase(f"c{i}", s, p, jax.random.fold_in(KEY, i), T)
+             for i, p in enumerate(_table_scenarios())]
+    buckets = group_cases(cases)
+    assert len(buckets) == 1                 # 4 families, ONE table bucket
+    assert len(buckets[0]) == 4
+
+
+def test_segment_and_table_scenarios_split_by_form():
+    s = GLRCUCB(N, M, history=32, detector_stride=4)
+    cases = [
+        SweepCase("tbl", s, GilbertElliottProcess(N, T), KEY, T),
+        SweepCase("seg", s, PiecewiseProcess(N, T, 2),
+                  jax.random.fold_in(KEY, 1), T),
+    ]
+    assert len(group_cases(cases)) == 2
+
+
+def test_traced_scenario_params_share_a_bucket():
+    s = MExp3(N, M)
+    base = GilbertElliottProcess(N, T)
+    cases = [SweepCase(f"p{v}", s, base.replace_traced(p_gb=v),
+                       jax.random.fold_in(KEY, i), T)
+             for i, v in enumerate((0.01, 0.05, 0.2))]
+    assert len(group_cases(cases)) == 1
+
+
+# ---------------------------------------------------------------------------
+# sweep parity vs the serial harness
+# ---------------------------------------------------------------------------
+
+def test_sweep_scenario_results_match_serial_bitwise():
+    s = GLRCUCB(N, M, history=32, detector_stride=4)
+    cases = [SweepCase(f"c{i}", s, p, jax.random.fold_in(KEY, 10 + i), T)
+             for i, p in enumerate(_table_scenarios())]
+    results, report = sweep(cases, block=False)
+    assert len(report) == 1 and report[0].batch == 4
+    for c in cases:
+        serial = simulate_aoi_regret(s, c.env, c.key, T)
+        got = results[c.name]
+        for k in serial:
+            assert np.array_equal(np.asarray(serial[k]), np.asarray(got[k])), (
+                c.name, k)
+
+
+def test_sweep_scenario_grid_of_1_bitwise():
+    s = MExp3(N, M)
+    proc = MobilityDriftProcess(N, T)
+    case = SweepCase("one", s, proc, KEY, T)
+    results, _ = sweep([case], block=True)
+    serial = simulate_aoi_regret(s, proc, KEY, T)
+    for k in serial:
+        assert np.array_equal(np.asarray(serial[k]),
+                              np.asarray(results["one"][k])), k
+
+
+def test_sharded_scenario_bucket_matches_unsharded():
+    """Scenario buckets ride the shard_map path realized — identical results
+    (bitwise on 1 device; CI's forced 4-device mesh exercises padding)."""
+    s = MExp3(N, M)
+    procs = _table_scenarios()[:3]          # 3 cases: uneven on a 4-dev mesh
+    cases = [SweepCase(f"c{i}", s, p, jax.random.fold_in(KEY, i), T)
+             for i, p in enumerate(procs)]
+    r1, _ = sweep(cases, block=False)
+    r2, rep2 = sweep(cases, block=False, shard=True)
+    assert rep2[0].sharded
+    for c in cases:
+        np.testing.assert_array_equal(
+            np.asarray(r1[c.name]["final_regret"]),
+            np.asarray(r2[c.name]["final_regret"]))
+
+
+# ---------------------------------------------------------------------------
+# legacy shims + engine guard + FL wiring
+# ---------------------------------------------------------------------------
+
+def test_legacy_generators_are_registry_shims():
+    k = jax.random.PRNGKey(7)
+    a = random_piecewise_env(k, N, 1000, 3, min_gap=0.1)
+    b = PiecewiseProcess(N, 1000, 3, min_gap=0.1).realize(k)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    a = random_adversarial_env(k, N, 500, flip_prob=0.02)
+    b = AdversarialProcess(N, 500, flip_prob=0.02).realize(k)
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_realize_empty_params_uses_instance_values():
+    """Regression: realize(key, params={}) used to select the knob-free
+    realizer path, baking the FIRST same-family instance's traced values
+    into the family-shared cache — a later instance with different knobs
+    silently got the first one's scenario.  Empty overrides now follow the
+    ``init_with_hp`` convention (treated as None)."""
+    k = jax.random.PRNGKey(0)
+    p1 = GilbertElliottProcess(N, 64, p_gb=0.5)
+    p2 = GilbertElliottProcess(N, 64, p_gb=0.01)
+    a = p1.realize(k, params={})
+    b = p2.realize(k, params={})
+    assert not np.array_equal(np.asarray(a.table), np.asarray(b.table))
+    np.testing.assert_array_equal(
+        np.asarray(b.table), np.asarray(p2.realize(k).table))
+
+
+def test_batch_engine_rejects_unrealized_process():
+    with pytest.raises(TypeError, match="unrealized ChannelProcess"):
+        simulate_aoi_regret_batch(
+            MExp3(N, M), GilbertElliottProcess(N, T),
+            jnp.stack([KEY]), T)
+
+
+def test_serial_harness_auto_realizes_process():
+    s = MExp3(N, M)
+    proc = GilbertElliottProcess(N, T)
+    out = simulate_aoi_regret(s, proc, KEY, T)
+    assert out["regret"].shape == (T,)
+    assert np.isfinite(np.asarray(out["final_regret"]))
+
+
+def test_fl_trainer_accepts_process_env():
+    from repro.fl import AsyncFLConfig, AsyncFLTrainer
+
+    def loss(p, x, y):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    cfg = AsyncFLConfig(n_clients=M, n_channels=N, local_epochs=1)
+    tr = AsyncFLTrainer(cfg, GLRCUCB(N, M, history=16),
+                        GilbertElliottProcess(N, 64), loss)
+    assert tr.env.form == "table"           # realized at construction
+    params = {"w": jnp.zeros((3,))}
+    st = tr.init(params, KEY)
+    bx = jnp.zeros((M, 1, 4, 3))
+    by = jnp.zeros((M, 1, 4))
+    st, mets = tr.round(st, bx, by, KEY)
+    assert np.isfinite(float(mets["local_loss"]))
+
+
+# ---------------------------------------------------------------------------
+# matcher score routing via scenario metadata
+# ---------------------------------------------------------------------------
+
+def test_matcher_scores_route_by_score_kind():
+    s = GLRCUCB(N, M, history=16)
+    st = s.init(KEY)
+    # give the state distinguishable UCB vs mean scores
+    st = st._replace(mu_tilde=jnp.linspace(0.9, 0.1, N),
+                     counts=jnp.ones((N,)))
+    t = jnp.array(10)
+    ucb_env = GilbertElliottProcess(N, 32).realize(KEY)       # "ucb" hint
+    mean_env = AdversarialProcess(N, 32).realize(KEY)         # "mean" hint
+    np.testing.assert_array_equal(
+        np.asarray(matcher_scores(s, st, t, ucb_env)),
+        np.asarray(s.channel_scores(st, t)))
+    np.testing.assert_array_equal(
+        np.asarray(matcher_scores(s, st, t, mean_env)),
+        np.asarray(st.mu_tilde))
+    # policies without mean_scores fall back to their native scores
+    from repro.core.bandits import RandomScheduler
+    r = RandomScheduler(N, M)
+    rst = r.init(KEY)
+    np.testing.assert_array_equal(
+        np.asarray(matcher_scores(r, rst, t, mean_env)),
+        np.asarray(r.channel_scores(rst, t)))
+
+
+def test_stationary_envs_keep_ucb_hint():
+    assert make_stationary(jnp.linspace(0.9, 0.1, N)).score_kind == "ucb"
+    assert random_adversarial_env(KEY, N, 64).score_kind == "mean"
