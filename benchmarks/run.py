@@ -9,14 +9,23 @@
   fig4_fairness      cumulative AoI variance (fairness), mean±std    (Fig. 4)
   fl_batch           serial-vs-batched speedup of the vmapped FL engine
                      (simulate_fl_batch) + batch-of-1 bitwise parity
-  hp_grid            16-point gamma x delta GLR-CUCB tuning grid as ONE
-                     vmapped program vs the per-point sweep (each point a
-                     fresh config = a fresh compile) + grid-of-1 parity
+  glr_detector       per-step microbench of the GLR-CUCB detector at H=1024:
+                     streaming carried-prefix state vs the legacy cumsum
+                     recompute (+ the geometric split grid), restart-round
+                     parity, and streaming-vs-recompute bitwise parity on
+                     the fig2a workloads
+  hp_grid            16-point gamma x delta GLR-CUCB tuning grid (H=1024,
+                     streaming detector) as ONE vmapped program vs the
+                     per-point sweep (each point a fresh config = a fresh
+                     compile) + grid-of-1 parity
   scenario_suite     12-scenario x 8-seed grid across 4 channel-scenario
                      families (Gilbert-Elliott fading, mobility drift,
                      SNR shadowing, jamming overlay) as ONE sweep bucket
                      vs the per-case serial loop + grid-of-1 parity
-                     (``--scenarios`` runs only this suite)
+                     (``--scenarios`` runs only the two scenario suites)
+  scenario_suite_glr the same 12-scenario grid scheduled by GLR-CUCB
+                     (streaming detector) — the piecewise-regime policy the
+                     recompute detector kept out of batched sweeps
   kernels            Pallas kernel wall-time vs jnp oracle (interpret mode)
   roofline           dry-run roofline table (reads experiments/dryrun/*.json)
 
@@ -128,10 +137,16 @@ def _timed(fn, *args, reps: int = 1, **kw):
 
 
 def _figure(fn):
-    """Run one figure, recording its wall time into BENCH."""
+    """Run one figure, recording its wall time and the per-phase sweep
+    executable-cache traffic into BENCH."""
     t0 = time.perf_counter()
+    s0 = sweep_cache_stats()
     fn()
+    s1 = sweep_cache_stats()
     BENCH["figures"][fn.__name__] = round(time.perf_counter() - t0, 3)
+    delta = {k: s1[k] - s0[k] for k in s1}
+    if any(delta.values()):
+        BENCH.setdefault("sweep_exec_cache_phases", {})[fn.__name__] = delta
 
 
 def _horizon() -> int:
@@ -286,6 +301,102 @@ def batch1_parity():
 
 
 # ---------------------------------------------------------------------------
+# glr_detector — streaming vs recompute GLR detector, per-step, at H=1024
+# ---------------------------------------------------------------------------
+
+def glr_detector():
+    """Per-step microbench of the GLR-CUCB detector hot path at H=1024.
+
+    Drives ``GLRCUCB.update`` through a policy-free rotating schedule (the
+    reward stream is identical for every implementation) long enough for
+    the ring buffer to wrap, and times three detector configs:
+
+      recompute   legacy path: O(N*H) one-hot append every step + cumsum
+                  prefix recompute per detection round (``ops.glr_scan``)
+      streaming   carried prefix-sum state: O(N) scatter append + the dense
+                  split grid evaluated on the M scheduled rows only
+      geometric   streaming + the O(log H) power-of-two split grid
+
+    Restart-round sequences must be identical between recompute and
+    streaming (integer prefixes => bitwise-equal statistics); the geometric
+    grid trades a bounded detection delay for the cheaper test, so its
+    restart agreement is recorded but not gated.  Also re-checks full
+    ``simulate_aoi_regret`` bitwise parity on the fig2a piecewise and
+    adversarial workloads (same env constructions, same GLR config)."""
+    h, n, m = 1024, 8, 2
+    t_steps = 600 if QUICK else 6000          # > H*N/M: the ring wraps
+    env = random_piecewise_env(jax.random.fold_in(KEY, 55), n, t_steps, 4)
+
+    def driver(sched):
+        @jax.jit
+        def run():
+            def step(state, inp):
+                t, k = inp
+                ch = (t + jnp.arange(m)) % n
+                rewards = env.sample(t, k)[ch]
+                state = sched.update(state, t, ch, rewards,
+                                     jnp.zeros((), jnp.int32))
+                return state, state.restarts
+            return jax.lax.scan(step, sched.init(KEY),
+                                (jnp.arange(t_steps),
+                                 jax.random.split(KEY, t_steps)))
+        return run
+
+    runs = {}
+    for label, cfg in [
+        ("recompute", GLRCUCB(n, m, history=h, detector_stride=5,
+                              detector_impl="recompute")),
+        ("streaming", GLRCUCB(n, m, history=h, detector_stride=5)),
+        ("geometric", GLRCUCB(n, m, history=h, detector_stride=5,
+                              split_grid="geometric")),
+    ]:
+        (state, trace), us = _timed(driver(cfg), reps=1 if QUICK else 3)
+        runs[label] = (np.asarray(trace), us / t_steps)
+        row(f"glr_detector/{label}", us / t_steps,
+            f"H={h};steps={t_steps};restarts={int(state.restarts)}")
+
+    restart_parity = bool(
+        np.array_equal(runs["recompute"][0], runs["streaming"][0]))
+    geo_match = bool(
+        np.array_equal(runs["recompute"][0], runs["geometric"][0]))
+
+    # --- committed-workload parity: the fig2a GLR config, end to end -------
+    t_sim = _horizon()
+    workload_parity = {}
+    for wname, wenv in [
+        ("piecewise", random_piecewise_env(KEY, 5, t_sim, 5)),
+        ("adversarial", random_adversarial_env(KEY, 5, t_sim,
+                                               flip_prob=0.002)),
+    ]:
+        mk = lambda impl: GLRCUCB(5, 2, history=1024, detector_stride=5,
+                                  detector_impl=impl)
+        a = simulate_aoi_regret(mk("recompute"), wenv, KEY, t_sim)
+        b = simulate_aoi_regret(mk("streaming"), wenv, KEY, t_sim)
+        workload_parity[wname] = bool(all(
+            np.array_equal(np.asarray(a[k]), np.asarray(b[k])) for k in a))
+
+    speedup = runs["recompute"][1] / runs["streaming"][1]
+    geo_speedup = runs["recompute"][1] / runs["geometric"][1]
+    BENCH["glr_detector"] = {
+        "history": h,
+        "channels": n,
+        "steps": t_steps,
+        "detector_stride": 5,
+        "recompute_us_per_step": round(runs["recompute"][1], 2),
+        "streaming_us_per_step": round(runs["streaming"][1], 2),
+        "geometric_us_per_step": round(runs["geometric"][1], 2),
+        "speedup": round(speedup, 2),
+        "geometric_speedup": round(geo_speedup, 2),
+        "restart_parity": restart_parity,
+        "geometric_restart_match": geo_match,
+        "workload_bitwise": workload_parity,
+    }
+    row("glr_detector/summary", 0.0,
+        f"speedup={speedup:.2f}x;geometric={geo_speedup:.2f}x;"
+        f"restart_parity={restart_parity};workloads={workload_parity}")
+
+
+# ---------------------------------------------------------------------------
 # hp_grid — hyper-parameter-vmapped tuning sweep vs the per-point sweep
 # ---------------------------------------------------------------------------
 
@@ -296,14 +407,15 @@ def hp_grid():
     compiled program (one per policy *family*).  Also re-checks grid-of-1
     bitwise parity against the per-value serial run on every run.
 
-    Tunes the windowed detector (history=256, the Fig. 3 config): the
-    (G, N, H) batched GLR scan stays cache-resident at H=256, so the
-    vmapped execution alone wins ~3x on 2-core CPU on top of the 16->1
-    compile amortization; at H=1024 the batched detector is memory-bound
-    and the win would come from compile savings only."""
+    Tunes the full-window detector (history=1024, the fig2a config).  This
+    was infeasible before the streaming detector: the recompute path's
+    per-step O(N*H) append + cumsum made the (G, N, H) batched scan
+    CPU-memory-bound at H=1024 (the grid had to retreat to H=256).  The
+    carried prefix state keeps the per-step work O(N), so the vmapped grid
+    wins on execution *and* on the 16->1 compile amortization."""
     T, N, M = _horizon(), 5, 2
     env = random_piecewise_env(jax.random.fold_in(KEY, 77), N, T, 5)
-    base = GLRCUCB(N, M, history=256, detector_stride=5)
+    base = GLRCUCB(N, M, history=1024, detector_stride=5)
     gammas = [0.5, 0.75, 1.0, 1.25]
     deltas = [1e-4, 1e-3, 1e-2, 1e-1]
     grid = [base.replace_traced(gamma=g, delta=d) for g in gammas for d in deltas]
@@ -346,7 +458,7 @@ def hp_grid():
     best = min(range(len(grid)),
                key=lambda i: float(serial_out[i]["final_regret"]))
     BENCH["hp_grid"] = {
-        
+        "history": base.history,
         "grid": len(grid),
         "gammas": gammas,
         "deltas": deltas,
@@ -369,27 +481,13 @@ def hp_grid():
 # scenario_suite — mixed-family channel-scenario grid through the registry
 # ---------------------------------------------------------------------------
 
-def scenario_suite():
-    """12 scenarios x S seeds spanning FOUR table-form families — bursty
-    Gilbert-Elliott fading, mobility drift, SNR-threshold shadowing and a
-    jamming overlay on a piecewise base — bucketed by canonical form into
-    ONE compiled simulation (the families merge; realization runs as one
-    tiny vmapped program per family).  The serial baseline is the per-case
-    ``simulate_aoi_regret`` loop over the same (process, key) cases, which
-    computes identical environments by construction (shared realization-key
-    derivation).  Re-checks grid-vs-serial and grid-of-1 bitwise parity on
-    every run.
-
-    The scheduler is M-Exp3 with the Exp3.S sharing term — the policy the
-    paper prescribes when the non-stationarity has no detectable
-    breakpoint structure, exactly these fading/drift/jamming regimes.  Its
-    tiny super-arm ops also vectorize superbly, so the batched win GROWS
-    with T (measured 4.5x at T=2000, 5.4x at T=4000 on 2-core CPU);
-    GLR-CUCB's chunky per-step detector caps the same suite at ~2x."""
+def _scenario_suite_impl(record_key, s):
+    """Shared body of the two scenario suites: 12 scenarios x S seeds across
+    the four table-form families, ONE sweep bucket vs the per-case serial
+    loop, grid-vs-serial + grid-of-1 bitwise parity re-checked per run."""
     T = 300 if QUICK else 2000
     seeds = 2 if QUICK else 8
-    n, m = 6, 2
-    s = MExp3(n, m, gamma=0.5, share_alpha=1e-3)
+    n = s.n_channels
     scenarios = (
         [(f"ge/{v}", GilbertElliottProcess(n, T, p_gb=v))
          for v in (0.02, 0.05, 0.15)]
@@ -455,8 +553,8 @@ def scenario_suite():
         for k in serial_out[c0.name])
 
     speedup = serial_s / max(grid_s, 1e-9)
-    BENCH["scenario_suite"] = {
-        "policy": "m-exp3",
+    BENCH[record_key] = {
+        "policy": s.name,
         "scenarios": len(scenarios),
         "families": families,
         "families_registered": len(registered_scenarios()),
@@ -471,16 +569,52 @@ def scenario_suite():
         "grid_vs_serial_bitwise": bool(grid_match),
         "grid1_bitwise_match": bool(grid1_match),
     }
-    row("sim/scenario-grid1-parity", 0.0, f"bitwise_match={grid1_match}")
-    row("scenario_suite/m-exp3/4-families", grid_s / len(cases) * 1e6,
+    row(f"sim/{record_key}-grid1-parity", 0.0, f"bitwise_match={grid1_match}")
+    row(f"{record_key}/{s.name}/4-families", grid_s / len(cases) * 1e6,
         f"scenarios={len(scenarios)};families={len(families)};"
         f"cases={len(cases)};buckets={buckets};compiles={compiles};"
         f"serial_s={serial_s:.2f};grid_s={grid_s:.2f};speedup={speedup:.2f}x")
     for j, (name, _) in enumerate(scenarios):
         vals = np.asarray([results[f"{name}/s{i}"]["final_regret"]
                            for i in range(seeds)])
-        row(f"scenario_suite/{name}", 0.0,
+        row(f"{record_key}/{name}", 0.0,
             f"regret={vals.mean():.0f}±{vals.std():.0f}")
+
+
+def scenario_suite():
+    """12 scenarios x S seeds spanning FOUR table-form families — bursty
+    Gilbert-Elliott fading, mobility drift, SNR-threshold shadowing and a
+    jamming overlay on a piecewise base — bucketed by canonical form into
+    ONE compiled simulation (the families merge; realization runs as one
+    tiny vmapped program per family).  The serial baseline is the per-case
+    ``simulate_aoi_regret`` loop over the same (process, key) cases, which
+    computes identical environments by construction (shared realization-key
+    derivation).  Re-checks grid-vs-serial and grid-of-1 bitwise parity on
+    every run.
+
+    The scheduler is M-Exp3 with the Exp3.S sharing term — the policy the
+    paper prescribes when the non-stationarity has no detectable
+    breakpoint structure, exactly these fading/drift/jamming regimes.  Its
+    tiny super-arm ops also vectorize superbly, so the batched win GROWS
+    with T (measured 4.5x at T=2000, 5.4x at T=4000 on 2-core CPU)."""
+    _scenario_suite_impl("scenario_suite", MExp3(6, 2, gamma=0.5,
+                                                 share_alpha=1e-3))
+
+
+def scenario_suite_glr():
+    """The identical 12-scenario grid scheduled by GLR-CUCB, which the
+    recompute detector kept out of the batched benchmarks entirely.  The
+    streaming detector cuts the batched suite's absolute wall-clock ~3x at
+    H=1024 (5.5s -> 1.9s at 96 cases on 2-core CPU; H=512, which also
+    exercises ring wraparound at T=2000, runs in ~1.6s) — but the
+    batched-vs-serial *ratio* stays ~2.2x, not M-Exp3's ~4.5x: the serial
+    streaming path is already fast, and the vmapped append is bound by
+    batched scatters (per-channel ring writes), which XLA:CPU serializes.
+    The gate therefore sits at >= 1.8x — it tracks that GLR-CUCB stays a
+    first-class citizen of the batched sweeps, while the >= 3x detector
+    win itself is gated per step by ``glr_detector``."""
+    _scenario_suite_impl("scenario_suite_glr",
+                         GLRCUCB(6, 2, history=512, detector_stride=5))
 
 
 # ---------------------------------------------------------------------------
@@ -780,8 +914,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke mode: T=500, single seed, short FL run")
     ap.add_argument("--scenarios", action="store_true",
-                    help="run only the channel-scenario suite (emits the "
-                         "scenario_suite BENCH record; composes with --quick)")
+                    help="run only the two channel-scenario suites (emits "
+                         "the scenario_suite and scenario_suite_glr BENCH "
+                         "records; composes with --quick)")
     ap.add_argument("--bench-out", default=os.path.join(ROOT, "BENCH_sim.json"),
                     help="where to write the engine wall-time record")
     ap.add_argument("--no-persistent-cache", action="store_true",
@@ -795,15 +930,19 @@ def main() -> None:
     BENCH["quick"] = QUICK
     BENCH["backend"] = jax.default_backend()
     BENCH["persistent_compilation_cache"] = PERSISTENT_CACHE
-    figures = ((scenario_suite,) if args.scenarios else
+    figures = ((scenario_suite, scenario_suite_glr) if args.scenarios else
                (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
-                hp_grid, scenario_suite, fig3_fig4_fl, fl_batch_bench,
-                kernels, roofline))
+                glr_detector, hp_grid, scenario_suite, scenario_suite_glr,
+                fig3_fig4_fl, fl_batch_bench, kernels, roofline))
     for fig in figures:
         _figure(fig)
     # per-run compile accounting of the sweep executable cache: misses are
-    # actual lowers+compiles, hits are reused executables
-    BENCH["sweep_exec_cache"] = sweep_cache_stats()
+    # actual lowers+compiles, hits are reused executables (per-figure
+    # breakdown in sweep_exec_cache_phases)
+    stats = sweep_cache_stats()
+    total = stats["hits"] + stats["misses"]
+    stats["hit_rate"] = round(stats["hits"] / total, 3) if total else None
+    BENCH["sweep_exec_cache"] = stats
     with open(args.bench_out, "w") as f:
         json.dump(BENCH, f, indent=2, sort_keys=True)
     print(f"# wrote {args.bench_out}", flush=True)

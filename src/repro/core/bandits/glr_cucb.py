@@ -13,12 +13,28 @@ The GLR statistic for a stream z_1..z_n is
                             + (n-s) * kl(mean(z_s+1..n), mean(z_1..n))
 
 evaluated against the threshold beta(n, delta) = (1 + 1/n) log(3 n sqrt(n) / delta).
-All split points are evaluated at once from a prefix-sum (O(n) per channel
-per round) — this is the compute hot-spot of the whole simulation: it runs
-inside every ``lax.scan`` step.  The detector therefore dispatches through
-``repro.kernels.ops.glr_scan`` (Pallas TPU kernel on TPU, the pure-jnp
-oracle on CPU); ``glr_statistic`` below is the single-stream reference form
-kept for tests and documentation.
+
+The detector is the compute hot-spot of the whole simulation: it runs
+inside every ``lax.scan`` step.  Two implementations share the statistic:
+
+* ``detector_impl="streaming"`` (default) carries per-channel prefix-sum
+  state in ``GLRCUCBState`` (``cum``/``total``/``base``): each appended
+  sample costs one O(N) masked scatter, and a detection round reads the
+  window prefixes straight from the carried state — **no cumsum anywhere**
+  and no raw-sample history at all.  Detection rounds dispatch through
+  ``repro.kernels.ops.glr_step`` (fused prefix append + test: Pallas
+  kernel on TPU, jnp oracle on CPU); the
+  ``split_grid`` field picks the dense reference grid (``"all"``) or the
+  O(log H) geometric subgrid (``"geometric"``).
+* ``detector_impl="recompute"`` is the legacy reference path: a rolled
+  chronological history buffer whose prefix sum is recomputed with an O(H)
+  ``cumsum`` per detection round via ``repro.kernels.ops.glr_scan``.
+
+For {0, 1} rewards every prefix quantity is an exactly representable small
+integer, so both implementations produce bitwise-identical statistics and
+identical restart rounds (asserted by tests and the ``glr_detector``
+benchmark gate).  ``glr_statistic`` below is the single-stream reference
+form kept for tests and documentation.
 """
 from __future__ import annotations
 
@@ -74,9 +90,18 @@ class GLRCUCBState(NamedTuple):
     mu_tilde: jnp.ndarray   # (N,) empirical means since last restart
     counts: jnp.ndarray     # (N,) D_i — observations since last restart
     tau: jnp.ndarray        # scalar int — last restart round
-    hist: jnp.ndarray       # (N, H) reward streams since restart (ring when full)
+    hist: jnp.ndarray       # (N, H) rolled chronological reward streams since
+                            # restart — recompute impl only ((N, 0) under
+                            # streaming: the streaming detector is prefix-
+                            # only and never materializes raw samples)
     restarts: jnp.ndarray   # scalar int — number of detected change points
     hp: Any                 # traced hyper-parameters {gamma, delta, min_samples}
+    cum: jnp.ndarray        # (N, H) carried prefix sums: cum[j] = stream total
+                            # at the sample last written to ring slot j
+                            # ((N, 0) under detector_impl="recompute")
+    total: jnp.ndarray      # (N,) running stream total since restart
+    base: jnp.ndarray       # (N,) stream total just before the window's
+                            # oldest sample (0 until the ring wraps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,24 +115,68 @@ class GLRCUCB(TracedHyperParams):
     history: int = 2048          # H — per-channel stream buffer (ring once full)
     detector_stride: int = 1     # run the GLR detector every k rounds
     min_samples: int = 8         # don't test before this many samples
-    detector_backend: Optional[str] = None  # ops.glr_scan backend (None = auto)
+    detector_backend: Optional[str] = None  # ops.glr_step/glr_scan backend
+                                            # (None = auto)
+    detector_impl: str = "streaming"  # "streaming" carried prefix state |
+                                      # "recompute" legacy per-round cumsum
+    split_grid: str = "all"      # GLR split points: "all" dense reference |
+                                 # "geometric" O(log H) power-of-two grid
+                                 # (streaming impl only)
     name: str = "glr-cucb"
 
     # traced: numerics-only knobs.  alpha stays structural (it sizes the
     # forced-exploration period with Python int arithmetic), as do
-    # history / detector_stride (shapes and trace-time control flow).
+    # history / detector_stride / detector_impl / split_grid (shapes and
+    # trace-time control flow).
     TRACED = ("gamma", "delta", "min_samples")
+
+    def __post_init__(self):
+        if self.detector_backend not in (None, "pallas", "pallas_interpret",
+                                         "jnp"):
+            raise ValueError(
+                f"GLRCUCB: unknown detector_backend "
+                f"{self.detector_backend!r}; use None (auto), 'pallas', "
+                "'pallas_interpret' or 'jnp'")
+        if self.detector_impl not in ("streaming", "recompute"):
+            raise ValueError(
+                f"GLRCUCB: unknown detector_impl {self.detector_impl!r}; "
+                "use 'streaming' or 'recompute'")
+        if self.split_grid not in ("all", "geometric"):
+            raise ValueError(
+                f"GLRCUCB: unknown split_grid {self.split_grid!r}; "
+                "use 'all' or 'geometric'")
+        if self.detector_impl == "recompute" and self.split_grid != "all":
+            raise ValueError(
+                "GLRCUCB: split_grid='geometric' needs the streaming "
+                "detector (the recompute path always evaluates the dense "
+                "grid)")
+
+    def _fused(self) -> bool:
+        """Whether streaming detection rounds run the fused ``ops.glr_step``
+        kernel (one VMEM pass) rather than the jnp split path (append
+        outside the cond, M-row statistic)."""
+        return (self.detector_backend in ("pallas", "pallas_interpret")
+                or (self.detector_backend is None
+                    and jax.default_backend() == "tpu"))
 
     # ------------------------------------------------------------------ api
     def init(self, key: jax.Array, hp: Optional[Dict[str, jnp.ndarray]] = None) -> GLRCUCBState:
         n, h = self.n_channels, self.history
+        streaming = self.detector_impl == "streaming"
+        hc = h if streaming else 0
+        # the streaming detector is prefix-only: the raw-sample history is
+        # never read by anything, so it is neither carried nor written
+        hh = 0 if streaming else h
         return GLRCUCBState(
             mu_tilde=jnp.zeros((n,), jnp.float32),
             counts=jnp.zeros((n,), jnp.float32),
             tau=jnp.zeros((), jnp.int32),
-            hist=jnp.zeros((n, h), jnp.float32),
+            hist=jnp.zeros((n, hh), jnp.float32),
             restarts=jnp.zeros((), jnp.int32),
             hp=self.params() if hp is None else dict(hp),
+            cum=jnp.zeros((n, hc), jnp.float32),
+            total=jnp.zeros((n,), jnp.float32),
+            base=jnp.zeros((n,), jnp.float32),
         )
 
     def ucb(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
@@ -122,8 +191,14 @@ class GLRCUCB(TracedHyperParams):
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         n, m = self.n_channels, self.n_clients
         ucb = self.ucb(state, t)
-        # tie-break unseen arms randomly so initial exploration is unbiased
-        noise = jax.random.uniform(key, (n,)) * 1e-6
+        # tie-break unseen arms randomly so initial exploration is unbiased;
+        # finite-UCB arms are NOT jittered — near-tie seen arms must rank by
+        # their actual Eq.-30 values, key-independently.  The jitter is
+        # scaled to 1e6 so it survives f32 rounding on top of the 1e9
+        # stand-in for +inf (ulp 64 there) while staying far above any
+        # finite UCB.
+        unseen = state.counts == 0
+        noise = jnp.where(unseen, jax.random.uniform(key, (n,)) * 1e6, 0.0)
         order = jnp.argsort(-(jnp.where(jnp.isinf(ucb), 1e9, ucb) + noise))
         top = order[:m]
         # forced exploration (Alg. 2 line 3): at rate alpha, make sure channel
@@ -149,7 +224,7 @@ class GLRCUCB(TracedHyperParams):
         rewards: jnp.ndarray,
         aux: jnp.ndarray,
     ) -> GLRCUCBState:
-        n, h = self.n_channels, self.history
+        n = self.n_channels
         sched = jnp.zeros((n,), bool).at[channels].set(True)
         r_vec = jnp.zeros((n,), jnp.float32).at[channels].set(rewards)
 
@@ -160,7 +235,92 @@ class GLRCUCB(TracedHyperParams):
             state.mu_tilde,
         )
         counts = jnp.where(sched, d_prev + 1.0, d_prev)
+        stride_ok = (t % self.detector_stride) == 0
 
+        if self.detector_impl == "streaming":
+            new_hist = state.hist            # (N, 0) — prefix-only detector
+            cum, total, base, change = self._detect_streaming(
+                state, channels, sched, r_vec, d_prev, counts, stride_ok)
+        else:
+            new_hist, cum, total, base, change = self._detect_recompute(
+                state, sched, r_vec, d_prev, counts, stride_ok)
+
+        # restart (Alg. 2 line 21): D_i = 0 for all i, tau <- t.  The
+        # streaming ring buffers stay in place on purpose: zeroed
+        # counts/total/base make every stale slot's split position invalid,
+        # so clearing the (N, H) buffers per step would only cost bandwidth.
+        mu = jnp.where(change, jnp.zeros_like(mu), mu)
+        counts = jnp.where(change, jnp.zeros_like(counts), counts)
+        total = jnp.where(change, jnp.zeros_like(total), total)
+        base = jnp.where(change, jnp.zeros_like(base), base)
+        if self.detector_impl == "recompute":
+            new_hist = jnp.where(change, jnp.zeros_like(new_hist), new_hist)
+        tau = jnp.where(change, t.astype(jnp.int32), state.tau)
+        restarts = state.restarts + change.astype(jnp.int32)
+        return GLRCUCBState(mu, counts, tau, new_hist, restarts, state.hp,
+                            cum, total, base)
+
+    def _fire(self, stats, sched, counts, hp):
+        """Restart decision from per-channel statistics (shared by both
+        detector implementations — identical thresholding)."""
+        n_valid = jnp.minimum(counts, float(self.history)).astype(jnp.int32)
+        thresh = glr_threshold(n_valid, hp["delta"])
+        fire = (sched & (stats >= thresh)
+                & (n_valid.astype(jnp.float32) >= hp["min_samples"]))
+        return jnp.any(fire)
+
+    def _detect_streaming(self, state, channels, sched, r_vec, d_prev,
+                          counts, stride_ok):
+        """Carried-prefix-sum detector — no cumsum, no O(N·H) append, no
+        raw-sample history at all (the statistic reads only
+        ``cum``/``total``/``base``).
+
+        On TPU (or a pinned pallas backend) a detection round is ONE fused
+        ``ops.glr_step`` kernel: prefix-ring append + GLR evaluation in a
+        single VMEM pass.  On the jnp path the append runs *outside* the
+        detection ``cond`` (a conditional append forces XLA to copy the
+        (N, H) prefix ring through the cond every step), and the test
+        itself evaluates only the M scheduled rows: unscheduled channels
+        can never fire (``fire`` requires ``sched``), so their statistics
+        are dead work the recompute path always paid for.
+        """
+        n, m = self.n_channels, self.n_clients
+        backend = self.detector_backend
+        if self._fused():
+            def detect(_):
+                return ops.glr_step(
+                    state.cum, state.total, state.base, d_prev,
+                    r_vec, sched, split_grid=self.split_grid,
+                    backend=backend)
+
+            def append_only(_):
+                cum2, total2, base2 = ops.ref.glr_stream_append(
+                    state.cum, state.total, state.base, d_prev,
+                    r_vec, sched)
+                return cum2, total2, base2, jnp.full((n,), -jnp.inf)
+
+            cum, total, base, stats = jax.lax.cond(
+                stride_ok, detect, append_only, None)
+        else:
+            cum, total, base = ops.ref.glr_stream_append(
+                state.cum, state.total, state.base, d_prev, r_vec, sched)
+
+            def detect(_):
+                return ops.ref.glr_stream_stat(
+                    cum[channels], total[channels], base[channels],
+                    counts[channels], self.split_grid)
+
+            stats_m = jax.lax.cond(
+                stride_ok, detect, lambda _: jnp.full((m,), -jnp.inf), None)
+            stats = jnp.full((n,), -jnp.inf).at[channels].set(stats_m)
+        change = self._fire(stats, sched, counts, state.hp)
+        return cum, total, base, change
+
+    def _detect_recompute(self, state, sched, r_vec, d_prev, counts,
+                          stride_ok):
+        """Legacy reference detector: rolled chronological history buffer,
+        full prefix-sum recompute (``ops.glr_scan``) per detection round."""
+        h = self.history
         # history write: append at D_prev, or ring-shift when the buffer is full
         full = d_prev >= h
         writepos = jnp.clip(d_prev.astype(jnp.int32), 0, h - 1)
@@ -175,22 +335,14 @@ class GLRCUCB(TracedHyperParams):
 
         def run_detector(_):
             n_valid = jnp.minimum(counts, float(h)).astype(jnp.int32)
-            stats = ops.glr_scan(new_hist, n_valid, backend=self.detector_backend)
-            thresh = glr_threshold(n_valid, state.hp["delta"])
-            fire = (sched & (stats >= thresh)
-                    & (n_valid.astype(jnp.float32) >= state.hp["min_samples"]))
-            return jnp.any(fire)
+            return ops.glr_scan(new_hist, n_valid,
+                                backend=self.detector_backend)
 
-        stride_ok = (t % self.detector_stride) == 0
-        change = jax.lax.cond(stride_ok, run_detector, lambda _: jnp.array(False), None)
-
-        # restart (Alg. 2 line 21): D_i = 0 for all i, tau <- t
-        mu = jnp.where(change, jnp.zeros_like(mu), mu)
-        counts = jnp.where(change, jnp.zeros_like(counts), counts)
-        new_hist = jnp.where(change, jnp.zeros_like(new_hist), new_hist)
-        tau = jnp.where(change, t.astype(jnp.int32), state.tau)
-        restarts = state.restarts + change.astype(jnp.int32)
-        return GLRCUCBState(mu, counts, tau, new_hist, restarts, state.hp)
+        stats = jax.lax.cond(
+            stride_ok, run_detector,
+            lambda _: jnp.full((self.n_channels,), -jnp.inf), None)
+        change = self._fire(stats, sched, counts, state.hp)
+        return new_hist, state.cum, state.total, state.base, change
 
     def channel_scores(self, state: GLRCUCBState, t: jnp.ndarray) -> jnp.ndarray:
         """UCB values (Eq. 30) rank channels for the Sec.-V matcher."""

@@ -1,6 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-glr_scan           GLR change-point statistic (Alg. 2 detector inner loop)
+glr_step           fused streaming GLR detector step: carried prefix-sum
+                   ring append + change-point test, no cumsum, no raw
+                   history (Alg. 2 detector, the GLR-CUCB scan-body hot path)
+glr_scan           GLR change-point statistic via full prefix recompute
+                   (the legacy reference detector)
 weighted_aggregate fused zeta-weighted masked client aggregation (Eq. 7)
 flash_attention    blockwise GQA attention for prefill (dense/MoE/VLM archs)
 

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused streaming GLR detector step, all channels at once.
+
+One kernel invocation performs, per channel, the whole detector step the
+GLR-CUCB scan body needs on a detection round:
+
+  1. **prefix append** — the masked sample append into the (N, H) carried
+     prefix-sum ring (slot = counts mod H): running stream total, the
+     evicted sample's cumulative total becoming the new window ``base``
+     once the ring wraps, and the per-slot cumulative totals ``cum``.  The
+     raw samples are never materialized — the statistic only ever reads
+     the prefixes, so there is no history buffer at all.
+  2. **GLR evaluation** — the sup over split points of the two-sided
+     Bernoulli-KL statistic, computed directly from the carried prefixes
+     (``P_s = cum[slot(s)] - base``) with **no cumsum**.
+
+The split positions are recovered per ring slot j as
+``s_j = n - ((w - j) mod H)`` (w the newest slot) — pure elementwise integer
+arithmetic on the lane dimension, so the evaluation needs no gather.  Under
+``split_grid="geometric"`` the same dense pass is masked down to splits at
+power-of-two distances from either window end (``s`` or ``n - s`` a power
+of two) — identical sup to the gather-based O(log H) oracle evaluation,
+since the split sets coincide.
+
+TPU mapping: channels ride the sublane dimension (blocks of 8), the ring
+rides the lane dimension (H padded to a multiple of 128).  Each grid step
+loads one (8, H) prefix tile plus five (8, 1) scalars-per-channel tiles
+into VMEM, runs the append + evaluation on the VPU, and writes the updated
+tiles back — one kernel per detector invocation instead of a write kernel
++ cumsum + statistic chain.
+
+Semantics of record: ``repro.kernels.ref.glr_step`` (tests sweep shapes,
+ring wraparound and both split grids against it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.glr_scan import _kl
+
+CHANNEL_BLOCK = 8
+
+
+def _is_pow2(x):
+    return (x > 0) & (jnp.bitwise_and(x, x - 1) == 0)
+
+
+def _glr_step_kernel(cum_ref, total_ref, base_ref, counts_ref,
+                     r_ref, sched_ref,
+                     cum_out, total_out, base_out, stat_out,
+                     *, h: int, geometric: bool):
+    cum = cum_ref[...].astype(jnp.float32)            # (Cb, Hp)
+    total = total_ref[...]                            # (Cb, 1)
+    base = base_ref[...]                              # (Cb, 1)
+    cnt = counts_ref[...]                             # (Cb, 1) int32
+    r = r_ref[...]                                    # (Cb, 1)
+    sch = sched_ref[...] > 0                          # (Cb, 1) bool
+
+    j = jax.lax.broadcasted_iota(jnp.int32, (1, cum.shape[-1]), 1)
+
+    # --- append: prefix-ring write -----------------------------------------
+    w = jnp.mod(cnt, h)                               # slot of this append
+    onehot = j == w                                   # (Cb, Hp); pad lanes never hit
+    evict = jnp.sum(jnp.where(onehot, cum, 0.0), axis=-1, keepdims=True)
+    full = cnt >= h
+    base2 = jnp.where(sch & full, evict, base)        # evicted C_{c-H} -> base
+    total2 = jnp.where(sch, total + r, total)
+    cum2 = jnp.where(onehot & sch, total2, cum)
+
+    # --- GLR evaluation from the carried prefixes --------------------------
+    c2 = cnt + sch.astype(jnp.int32)
+    n = jnp.minimum(c2, h)
+    w2 = jnp.mod(c2 - 1, h)                           # newest slot
+    s = n - jnp.mod(w2 - j, h)                        # split position at slot j
+    P = cum2 - base2                                  # window prefix at slot j
+    W = total2 - base2                                # window total
+    s_f = jnp.maximum(s.astype(jnp.float32), 1.0)
+    n_f = n.astype(jnp.float32)
+    mu_all = W / jnp.maximum(n_f, 1.0)
+    mu_a = P / s_f
+    mu_b = (W - P) / jnp.maximum(n_f - s_f, 1.0)
+    stat = (s_f * _kl(mu_a, mu_all)
+            + (n_f - s_f) * _kl(mu_b, mu_all))
+    valid = (s >= 1) & (s <= n - 1) & (j < h)         # pad lanes masked out
+    if geometric:
+        valid &= _is_pow2(s) | _is_pow2(n - s)
+
+    cum_out[...] = cum2
+    total_out[...] = total2
+    base_out[...] = base2
+    stat_out[...] = jnp.max(jnp.where(valid, stat, -jnp.inf),
+                            axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("split_grid", "interpret"))
+def glr_step(cum, total, base, counts, r_vec, sched,
+             split_grid: str = "all", interpret: bool = False):
+    """Fused prefix append + GLR test.  All per-channel: cum (N, H);
+    total/base/counts/r_vec/sched (N,).
+    Returns (cum, total, base, stats)."""
+    n_chan, h = cum.shape
+    cb = CHANNEL_BLOCK
+    n_pad = (-n_chan) % cb
+    h_pad = (-h) % 128
+    cum_p = jnp.pad(cum.astype(jnp.float32), ((0, n_pad), (0, h_pad)))
+    col = lambda x, dt: jnp.pad(x.astype(dt), (0, n_pad))[:, None]
+    total_p = col(total, jnp.float32)
+    base_p = col(base, jnp.float32)
+    counts_p = col(counts, jnp.int32)
+    r_p = col(r_vec, jnp.float32)
+    sched_p = col(sched, jnp.int32)
+    np_, hp = n_chan + n_pad, h + h_pad
+
+    wide = pl.BlockSpec((cb, hp), lambda i: (i, 0))
+    narrow = pl.BlockSpec((cb, 1), lambda i: (i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_glr_step_kernel, h=h,
+                          geometric=(split_grid == "geometric")),
+        grid=(np_ // cb,),
+        in_specs=[wide, narrow, narrow, narrow, narrow, narrow],
+        out_specs=[wide, narrow, narrow, narrow],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, hp), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cum_p, total_p, base_p, counts_p, r_p, sched_p)
+    cum2, total2, base2, stats = outs
+    return (cum2[:n_chan, :h], total2[:n_chan, 0],
+            base2[:n_chan, 0], stats[:n_chan, 0])

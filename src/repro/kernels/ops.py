@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import glr_scan as _glr
+from repro.kernels import glr_step as _gs
 from repro.kernels import weighted_aggregate as _wa
 from repro.kernels import ref as ref  # re-export the oracles
 
@@ -54,6 +55,56 @@ def glr_scan(
     if backend == "pallas_interpret":
         return _glr.glr_scan(hist, counts, interpret=True)
     raise ValueError(f"glr_scan: unknown backend {backend!r}; use one of {_GLR_BACKENDS}")
+
+
+_GLR_SPLIT_GRIDS = ("all", "geometric")
+
+
+def glr_step(cum, total, base, counts, r_vec, sched,
+             split_grid: str = "all", backend: str | None = None):
+    """Fused streaming GLR detector step (prefix append + test).
+
+    Per channel: masked append of ``r_vec`` (where ``sched``) into the
+    carried prefix-sum state (``cum``/``total``/``base`` — see
+    ``repro.kernels.ref.glr_stream_append``; raw samples are never
+    materialized), and the GLR statistic over the post-append window, with
+    no cumsum anywhere.  Returns ``(cum, total, base, stats)``.
+
+    ``split_grid``:
+      "all"        every split point 1 <= s <= n-1 (the dense reference grid)
+      "geometric"  only splits at power-of-two distances from either window
+                   end — O(log H) evaluated splits per test instead of O(H)
+
+    ``backend`` follows the ``glr_scan`` dispatch policy (this runs inside
+    the GLR-CUCB scan body on every detection round):
+
+      None               auto: "pallas" on TPU, "jnp" elsewhere (the hot-path
+                         default used by ``GLRCUCB.update``)
+      "pallas"           compiled fused Pallas kernel (interpret mode off-TPU)
+      "pallas_interpret" Pallas kernel forced into interpret mode (kernel
+                         semantics tests)
+      "jnp"              the pure-jnp oracle in ``repro.kernels.ref`` (the
+                         geometric grid gathers its O(log H) splits there;
+                         the Pallas kernel masks the same set densely — the
+                         split sets coincide, so the sup agrees)
+    """
+    if split_grid not in _GLR_SPLIT_GRIDS:
+        raise ValueError(
+            f"glr_step: unknown split_grid {split_grid!r}; "
+            f"use one of {_GLR_SPLIT_GRIDS}")
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return ref.glr_step(cum, total, base, counts, r_vec, sched,
+                            split_grid=split_grid)
+    if backend == "pallas":
+        return _gs.glr_step(cum, total, base, counts, r_vec, sched,
+                            split_grid=split_grid, interpret=_interpret())
+    if backend == "pallas_interpret":
+        return _gs.glr_step(cum, total, base, counts, r_vec, sched,
+                            split_grid=split_grid, interpret=True)
+    raise ValueError(
+        f"glr_step: unknown backend {backend!r}; use one of {_GLR_BACKENDS}")
 
 
 _WA_BACKENDS = ("pallas", "pallas_interpret", "jnp")

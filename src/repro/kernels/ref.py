@@ -46,6 +46,130 @@ def glr_scan(hist: jnp.ndarray, counts: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# glr_step — streaming (carried prefix-sum) detector
+# ---------------------------------------------------------------------------
+#
+# The recompute path above re-derives the window prefix sum from the raw
+# history with an O(H) ``cumsum`` on every detector call.  The streaming
+# path instead carries, per channel,
+#
+#   cum[j]   cumulative stream total C_k = z_1 + .. + z_k for the sample k
+#            most recently written to ring slot j
+#   total    running stream total C_c (c = samples since restart)
+#   base     C_{c-n} where n = min(c, H) — the cumulative total just
+#            before the window's oldest sample (0 until the ring wraps)
+#
+# so the window prefix at split s is ``cum[slot(s)] - base`` and the window
+# total is ``total - base`` — no cumsum, and the per-step maintenance is one
+# O(N) scatter.  For {0, 1} rewards every quantity is an exactly
+# representable small integer, so the streaming statistic equals the
+# recompute statistic *bitwise* (general float streams agree to ~1e-5; see
+# tests/test_glr_stream.py).
+
+
+def glr_split_offsets(h: int):
+    """Powers of two <= h — the geometric split-grid offsets (static)."""
+    offs = []
+    d = 1
+    while d <= h:
+        offs.append(d)
+        d *= 2
+    return jnp.asarray(offs, jnp.int32)
+
+
+def glr_stream_append(cum, total, base, counts, r_vec, sched):
+    """Append one masked sample per channel to the streaming detector state.
+
+    cum: (N, H) prefix ring;  total/base: (N,);  counts: (N,) samples
+    since restart (pre-append, float or int);  r_vec: (N,) rewards;
+    sched: (N,) bool — which channels observed a sample this round.
+    Returns the updated ``(cum, total, base)``.  O(N) scatter/gather —
+    independent of H.  Correct across ring wraparound (the evicted sample's
+    ``cum`` entry becomes the new ``base``) and restarts (zeroed
+    counts/total/base make every stale slot invalid; the ring itself need
+    not be cleared — split positions only ever reach the n newest slots).
+
+    The raw samples are never materialized: the statistic reads only the
+    carried prefixes (a sample is recoverable as the difference of
+    consecutive ``cum`` entries if ever needed).
+    """
+    n, h = cum.shape
+    c_prev = counts.astype(jnp.int32)
+    w = jnp.mod(c_prev, h)                     # ring slot of this append
+    rows = jnp.arange(n)
+    evict = cum[rows, w]                       # C_{c-H} when the ring is full
+    full = c_prev >= h
+    base2 = jnp.where(sched & full, evict, base)
+    total2 = jnp.where(sched, total + r_vec, total)
+    cum2 = cum.at[rows, w].set(jnp.where(sched, total2, evict))
+    return cum2, total2, base2
+
+
+def _stream_stat_terms(P, W, s, n):
+    """Shared GLR-statistic arithmetic for both split evaluators.
+
+    P: window prefix sums at the candidate splits; W: window totals;
+    s: split positions (int); n: window lengths (int).  Division guards are
+    the identity on valid splits (1 <= s <= n-1), so values match the
+    recompute reference exactly there.
+    """
+    s_f = jnp.maximum(s.astype(jnp.float32), 1.0)
+    n_f = n.astype(jnp.float32)
+    mu_all = W / jnp.maximum(n_f, 1.0)
+    mu_a = P / s_f
+    mu_b = (W - P) / jnp.maximum(n_f - s_f, 1.0)
+    return (s_f * bernoulli_kl(mu_a, mu_all)
+            + (n_f - s_f) * bernoulli_kl(mu_b, mu_all))
+
+
+def glr_stream_stat(cum, total, base, counts, split_grid: str = "all"):
+    """GLR statistic from the carried prefix state — no cumsum, no history.
+
+    ``split_grid="all"`` evaluates every split (per ring slot j the split
+    position is s_j = n - ((w - j) mod H), w the newest slot): O(H)
+    elementwise work but nothing sequential.  ``"geometric"`` gathers only
+    the O(log H) splits at power-of-two distances from either window end
+    (s or n - s a power of two) — the sup over that subgrid lower-bounds the
+    dense sup, trading a bounded detection delay for a ~H/log H cheaper
+    test.  Returns (N,) statistics; -inf where n < 2.
+    """
+    n_chan, h = cum.shape
+    c = counts.astype(jnp.int32)[:, None]
+    n = jnp.minimum(c, h)
+    W = (total - base)[:, None]
+    if split_grid == "geometric":
+        d = glr_split_offsets(h)[None, :]                    # (1, L)
+        s = jnp.concatenate(
+            [jnp.broadcast_to(d, (n_chan, d.shape[1])), n - d], axis=1)
+        slot = jnp.mod(c - n + s - 1, h)                     # slot of sample s
+        P = jnp.take_along_axis(cum, slot, axis=1) - base[:, None]
+    else:
+        j = jnp.arange(h)[None, :]
+        w_last = jnp.mod(c - 1, h)
+        s = n - jnp.mod(w_last - j, h)                       # split at slot j
+        P = cum - base[:, None]
+    stat = _stream_stat_terms(P, W, s, n)
+    valid = (s >= 1) & (s <= n - 1)
+    return jnp.max(jnp.where(valid, stat, -jnp.inf), axis=-1)
+
+
+def glr_step(cum, total, base, counts, r_vec, sched,
+             split_grid: str = "all"):
+    """Fused streaming detector step: prefix-ring append + GLR test.
+
+    The semantics of record for the Pallas kernel in
+    ``repro.kernels.glr_step``: one masked sample append per channel
+    (``glr_stream_append``) followed by the statistic over the post-append
+    state (``glr_stream_stat``).  Returns ``(cum, total, base, stats)``.
+    """
+    cum2, total2, base2 = glr_stream_append(
+        cum, total, base, counts, r_vec, sched)
+    c2 = counts.astype(jnp.int32) + sched.astype(jnp.int32)
+    stats = glr_stream_stat(cum2, total2, base2, c2, split_grid)
+    return cum2, total2, base2, stats
+
+
+# ---------------------------------------------------------------------------
 # weighted_aggregate
 # ---------------------------------------------------------------------------
 

@@ -20,7 +20,10 @@ repeated ``sweep`` calls with structurally identical buckets — e.g. a
 benchmark running fig2a then a tuning grid with the same policy family, or
 two grids with different scalar values — reuse the executable instead of
 re-lowering.  ``sweep_cache_stats()`` exposes hit/miss counts (the
-benchmark harness reports them in ``BENCH_sim.json``).
+benchmark harness reports them in ``BENCH_sim.json``, with a per-figure
+breakdown and overall hit rate, so every compile is attributable; case
+keys and traced scalar values never enter a bucket signature, and
+``block=False`` sweeps bypass the AOT cache by design).
 
 Scenario processes (``repro.core.channels.ChannelProcess``) drop into
 ``SweepCase.env`` unrealized: cases bucket by the scenario's canonical-form

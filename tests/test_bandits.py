@@ -109,6 +109,35 @@ def test_bernoulli_kl_properties():
     assert np.isfinite(float(bernoulli_kl(jnp.array(0.0), jnp.array(0.3))))
 
 
+def test_glr_cucb_finite_ucb_ordering_is_noise_free():
+    """Tie-break jitter is restricted to unseen arms: once every arm has
+    been pulled, selection must be a pure function of the UCB values —
+    identical across PRNG keys (the old all-arm jitter could flip near-tie
+    finite arms)."""
+    n, m = 6, 2
+    sched = GLRCUCB(n, m, history=32)
+    state = sched.init(KEY)
+    aoi = jnp.ones((m,))
+    # pull every arm a few times with distinct deterministic reward rates
+    for t in range(3 * n):
+        ch = jnp.array([t % n, (t + n // 2) % n])
+        rewards = (ch < 3).astype(jnp.float32)
+        state = sched.update(state, jnp.array(t), ch, rewards,
+                             jnp.zeros((), jnp.int32))
+    assert bool(jnp.all(state.counts > 0))
+    t = jnp.array(100)
+    picks = [sched.select(state, t, jax.random.PRNGKey(s), aoi)[0]
+             for s in range(6)]
+    for p in picks[1:]:
+        np.testing.assert_array_equal(np.asarray(picks[0]), np.asarray(p))
+    # unseen arms keep the randomized tie-break: fresh state, all-inf UCBs
+    fresh = sched.init(KEY)
+    first = {tuple(np.asarray(
+        sched.select(fresh, jnp.array(0), jax.random.PRNGKey(s), aoi)[0]))
+        for s in range(12)}
+    assert len(first) > 1       # key-dependent exploration order
+
+
 def test_glr_cucb_restarts_on_breakpoint():
     n, m, t_break = 4, 2, 120
     means = jnp.array([[0.95, 0.9, 0.05, 0.02], [0.05, 0.02, 0.95, 0.9]])

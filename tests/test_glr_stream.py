@@ -1,0 +1,317 @@
+"""Streaming GLR detector: carried prefix-sum state, split grids, fused step.
+
+Contracts under test (tentpole of the streaming-detector PR):
+
+* the carried prefix state (``cum``/``total``/``base``) reproduces the
+  reference ``glr_statistic`` across ring-buffer wraparound, restarts and
+  ``detector_stride > 1`` — *bitwise* for {0, 1} streams (every prefix is an
+  exactly representable integer), to float tolerance for arbitrary streams;
+* restart-round sequences of the streaming and legacy recompute detectors
+  are identical on seeded Bernoulli workloads;
+* the fused Pallas ``glr_step`` kernel (interpret mode off-TPU) matches the
+  jnp oracle for both split grids, including the kernel's dense-masked
+  geometric evaluation vs the oracle's O(log H) gather;
+* the geometric split grid lower-bounds the dense sup and its detection
+  delay is bounded on seeded change-point streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandits import GLRCUCB
+from repro.core.bandits.glr_cucb import glr_statistic, glr_threshold
+from repro.core.channels import random_piecewise_env
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _reconstruct_window(hist, counts, i, h):
+    """Chronological window stream of channel ``i`` from the ring buffer."""
+    c = int(counts[i])
+    n = min(c, h)
+    slots = [((c - n + s) - 1) % h for s in range(1, n + 1)]
+    return np.asarray(hist)[i, slots], n
+
+
+def _drive_stream(streams, sched_mask, h):
+    """Feed (T, N) samples through ``ref.glr_step`` one round at a time,
+    returning the stat trace and the final carried state.  The detector
+    itself is prefix-only; the raw-sample ring ``hist`` is maintained HERE
+    (slot = counts mod H, mirroring the append) purely so tests can
+    reconstruct chronological windows for the reference statistic."""
+    t_rounds, n = streams.shape
+    hist = np.zeros((n, h), np.float32)
+    cum = jnp.zeros((n, h))
+    total = jnp.zeros(n)
+    base = jnp.zeros(n)
+    counts = jnp.zeros(n)
+    stats_trace = []
+    for t in range(t_rounds):
+        slots = np.mod(np.asarray(counts).astype(int), h)
+        sel = np.asarray(sched_mask[t])
+        hist[sel, slots[sel]] = streams[t][sel]
+        cum, total, base, stats = ref.glr_step(
+            cum, total, base, counts,
+            jnp.asarray(streams[t]), jnp.asarray(sched_mask[t]))
+        counts = counts + jnp.asarray(sched_mask[t])
+        stats_trace.append(np.asarray(stats))
+    return np.asarray(stats_trace), (hist, cum, total, base, counts)
+
+
+# ---------------------------------------------------------------------------
+# carried prefix state vs the reference statistic
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 100), st.floats(0.2, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_stream_state_matches_reference_bernoulli(seed, p):
+    """{0, 1} streams: streaming stat == glr_statistic on the reconstructed
+    chronological window, across ring wraparound (T ≈ 3H) and masked
+    appends.  Integer prefixes make the match exact (asserted at 1e-5)."""
+    h, n, t_rounds = 24, 3, 70
+    k = jax.random.PRNGKey(seed)
+    streams = np.asarray(
+        jax.random.bernoulli(k, p, (t_rounds, n)).astype(jnp.float32))
+    sched = np.asarray(
+        jax.random.bernoulli(jax.random.fold_in(k, 1), 0.7, (t_rounds, n)))
+    stats_trace, (hist, cum, total, base, counts) = _drive_stream(
+        streams, sched, h)
+    for i in range(n):
+        window, valid = _reconstruct_window(hist, counts, i, h)
+        want = float(glr_statistic(
+            jnp.asarray(np.pad(window, (0, h - valid)), jnp.float32),
+            jnp.asarray(valid)))
+        got = float(ref.glr_stream_stat(cum, total, base, counts)[i])
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_stream_state_matches_reference_float_streams():
+    """Arbitrary float rewards: the carried prefix (C_k - C_{c-n}) and the
+    recomputed cumsum agree to accumulation tolerance, not bitwise."""
+    h, n, t_rounds = 32, 2, 90
+    k = jax.random.PRNGKey(7)
+    streams = np.asarray(jax.random.uniform(k, (t_rounds, n)))
+    sched = np.ones((t_rounds, n), bool)
+    _, (hist, cum, total, base, counts) = _drive_stream(streams, sched, h)
+    for i in range(n):
+        window, valid = _reconstruct_window(hist, counts, i, h)
+        want = float(glr_statistic(
+            jnp.asarray(np.pad(window, (0, h - valid)), jnp.float32),
+            jnp.asarray(valid)))
+        got = float(ref.glr_stream_stat(cum, total, base, counts)[i])
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_stream_append_restart_masks_stale_slots():
+    """After a restart (zeroed counts/total/base, ring NOT cleared) stale
+    slots must be unreachable: the statistic over the fresh short stream
+    matches a fresh-buffer run bitwise."""
+    h = 16
+    k = jax.random.PRNGKey(2)
+    streams = np.asarray(
+        jax.random.bernoulli(k, 0.5, (40, 1)).astype(jnp.float32))
+    _, (_, cum, total, base, counts) = _drive_stream(
+        streams, np.ones((40, 1), bool), h)
+    # restart: zero the running state, keep the dirty prefix ring
+    total = jnp.zeros_like(total)
+    base = jnp.zeros_like(base)
+    counts = jnp.zeros_like(counts)
+    fresh = np.asarray(
+        jax.random.bernoulli(jax.random.fold_in(k, 9), 0.4, (6, 1))
+        .astype(jnp.float32))
+    for t in range(fresh.shape[0]):
+        cum, total, base, _ = ref.glr_step(
+            cum, total, base, counts, jnp.asarray(fresh[t]),
+            jnp.array([True]))
+        counts = counts + 1
+    got = float(ref.glr_stream_stat(cum, total, base, counts)[0])
+    want = float(glr_statistic(
+        jnp.asarray(np.pad(fresh[:, 0], (0, h - 6)), jnp.float32),
+        jnp.asarray(6)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# streaming vs recompute GLR-CUCB: restart parity on seeded workloads
+# ---------------------------------------------------------------------------
+
+def _restart_trace(sched, env, t_rounds):
+    @jax.jit
+    def run():
+        def step(state, inp):
+            t, k = inp
+            ch = (t + jnp.arange(sched.n_clients)) % sched.n_channels
+            rewards = env.sample(t, k)[ch]
+            state = sched.update(state, t, ch, rewards,
+                                 jnp.zeros((), jnp.int32))
+            return state, state.restarts
+        return jax.lax.scan(step, sched.init(KEY),
+                            (jnp.arange(t_rounds),
+                             jax.random.split(KEY, t_rounds)))
+    (state, trace) = run()
+    return np.asarray(trace), state
+
+
+@pytest.mark.parametrize("history,stride", [(64, 1), (48, 3), (32, 5)])
+def test_stream_restart_rounds_identical_seeded(history, stride):
+    """Streaming and recompute detectors fire at the SAME rounds on seeded
+    Bernoulli workloads — including after ring wraparound and with
+    ``detector_stride > 1`` — and leave identical bandit statistics."""
+    n, m, t_rounds = 5, 2, 260
+    env = random_piecewise_env(jax.random.fold_in(KEY, 31), n, t_rounds, 3)
+    mk = lambda impl: GLRCUCB(n, m, history=history, detector_stride=stride,
+                              detector_impl=impl)
+    tr_s, st_s = _restart_trace(mk("streaming"), env, t_rounds)
+    tr_r, st_r = _restart_trace(mk("recompute"), env, t_rounds)
+    np.testing.assert_array_equal(tr_s, tr_r)
+    np.testing.assert_array_equal(np.asarray(st_s.mu_tilde),
+                                  np.asarray(st_r.mu_tilde))
+    np.testing.assert_array_equal(np.asarray(st_s.counts),
+                                  np.asarray(st_r.counts))
+    assert int(st_s.tau) == int(st_r.tau)
+
+
+def test_stream_full_simulation_bitwise():
+    """End-to-end ``simulate_aoi_regret`` trajectories agree bitwise between
+    the two detector implementations (Bernoulli rewards => exact integer
+    prefixes => identical statistics => identical restarts)."""
+    from repro.core.regret import simulate_aoi_regret
+    env = random_piecewise_env(KEY, 5, 1200, 3)
+    mk = lambda impl: GLRCUCB(5, 2, history=128, detector_stride=4,
+                              detector_impl=impl)
+    a = simulate_aoi_regret(mk("recompute"), env, KEY, 1200)
+    b = simulate_aoi_regret(mk("streaming"), env, KEY, 1200)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_channels,h", [(1, 32), (5, 96), (8, 128), (13, 200)])
+@pytest.mark.parametrize("split_grid", ["all", "geometric"])
+def test_glr_step_kernel_matches_oracle(n_channels, h, split_grid):
+    rng = np.random.default_rng(n_channels * h)
+    # cum must be a consistent prefix state: rebuild from a synthetic stream
+    counts = jnp.asarray(rng.integers(0, 3 * h, n_channels), jnp.float32)
+    totals = jnp.asarray(rng.random(n_channels) * 10, jnp.float32)
+    base = jnp.asarray(rng.random(n_channels), jnp.float32)
+    cum = jnp.asarray(np.sort(rng.random((n_channels, h)), axis=1),
+                      jnp.float32) + base[:, None]
+    r_vec = jnp.asarray(rng.random(n_channels), jnp.float32)
+    sched = jnp.asarray(rng.random(n_channels) < 0.7)
+    got = ops.glr_step(cum, totals, base, counts, r_vec, sched,
+                       split_grid=split_grid, backend="pallas_interpret")
+    want = ops.glr_step(cum, totals, base, counts, r_vec, sched,
+                        split_grid=split_grid, backend="jnp")
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_glr_step_dispatch_rejects_unknown():
+    z2 = jnp.zeros((2, 32))
+    z1 = jnp.zeros((2,))
+    s = jnp.ones((2,), bool)
+    with pytest.raises(ValueError, match="unknown backend"):
+        ops.glr_step(z2, z1, z1, z1, z1, s, backend="cuda")
+    with pytest.raises(ValueError, match="unknown split_grid"):
+        ops.glr_step(z2, z1, z1, z1, z1, s, split_grid="dense")
+
+
+def test_glr_cucb_update_fused_backend_equivalence():
+    """The fused-kernel detector path (``detector_backend='pallas_interpret'``,
+    append+test inside one cond branch) and the jnp split path (append
+    outside, M-row statistic) drive identical GLR-CUCB trajectories,
+    including after ring wraparound."""
+    n, m, t_rounds = 5, 2, 120
+    env = random_piecewise_env(jax.random.fold_in(KEY, 13), n, t_rounds, 2)
+    mk = lambda be: GLRCUCB(n, m, history=16, detector_stride=3,
+                            detector_backend=be)
+    _, st_j = _restart_trace(mk("jnp"), env, t_rounds)
+    _, st_p = _restart_trace(mk("pallas_interpret"), env, t_rounds)
+    assert int(st_j.restarts) == int(st_p.restarts)
+    np.testing.assert_allclose(np.asarray(st_j.mu_tilde),
+                               np.asarray(st_p.mu_tilde),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(st_j.counts),
+                                  np.asarray(st_p.counts))
+
+
+def test_glr_cucb_rejects_bad_detector_config():
+    with pytest.raises(ValueError, match="detector_impl"):
+        GLRCUCB(4, 2, detector_impl="cumsum")
+    with pytest.raises(ValueError, match="split_grid"):
+        GLRCUCB(4, 2, split_grid="dense")
+    with pytest.raises(ValueError, match="streaming"):
+        GLRCUCB(4, 2, detector_impl="recompute", split_grid="geometric")
+    # backend typos must fail loudly at config time, not silently fall
+    # back to the jnp path (the streaming branch never reaches the
+    # ops-level backend validation)
+    with pytest.raises(ValueError, match="detector_backend"):
+        GLRCUCB(4, 2, detector_backend="Pallas")
+    with pytest.raises(ValueError, match="detector_backend"):
+        GLRCUCB(4, 2, detector_backend="cuda", detector_impl="recompute")
+
+
+# ---------------------------------------------------------------------------
+# geometric split grid
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 60), st.floats(0.2, 0.8))
+@settings(max_examples=10, deadline=None)
+def test_geometric_stat_lower_bounds_dense(seed, p):
+    """The geometric sup runs over a subset of the dense split grid, so it
+    can never exceed the dense statistic."""
+    h, n, t_rounds = 32, 3, 50
+    k = jax.random.PRNGKey(seed)
+    streams = np.asarray(
+        jax.random.bernoulli(k, p, (t_rounds, n)).astype(jnp.float32))
+    sched = np.ones((t_rounds, n), bool)
+    _, (hist, cum, total, base, counts) = _drive_stream(streams, sched, h)
+    dense = np.asarray(ref.glr_stream_stat(cum, total, base, counts, "all"))
+    geo = np.asarray(
+        ref.glr_stream_stat(cum, total, base, counts, "geometric"))
+    assert np.all(geo <= dense + 1e-5)
+
+
+def _first_fire(stream, h, grid, delta=1e-3):
+    cum = jnp.zeros((1, h))
+    total = jnp.zeros(1)
+    base = jnp.zeros(1)
+    counts = jnp.zeros(1)
+    for i, z in enumerate(stream):
+        cum, total, base, stats = ref.glr_step(
+            cum, total, base, counts, jnp.array([float(z)]),
+            jnp.array([True]), split_grid=grid)
+        counts = counts + 1
+        n = min(int(counts[0]), h)
+        if float(stats[0]) > float(glr_threshold(jnp.asarray(n), delta)):
+            return i
+    return None
+
+
+@pytest.mark.parametrize("p0,p1,changepoint", [
+    (0.7, 0.3, 100),
+    (0.8, 0.2, 200),
+    (0.9, 0.5, 97),
+])
+def test_geometric_detection_delay_bounded(p0, p1, changepoint):
+    """Detection-delay regression for the O(log H) grid: on seeded jump
+    streams the geometric detector fires at most 16 samples (and at most
+    2x the dense delay) after the dense reference."""
+    k = jax.random.PRNGKey(int(p0 * 100 + p1 * 10))
+    pre = jax.random.bernoulli(k, p0, (changepoint,)).astype(jnp.float32)
+    post = jax.random.bernoulli(
+        jax.random.fold_in(k, 1), p1, (600,)).astype(jnp.float32)
+    stream = np.concatenate([np.asarray(pre), np.asarray(post)])
+    d_all = _first_fire(stream, 512, "all")
+    d_geo = _first_fire(stream, 512, "geometric")
+    assert d_all is not None and d_geo is not None
+    assert d_all >= changepoint                       # no premature firing
+    assert 0 <= d_geo - d_all <= 16
+    assert (d_geo - changepoint) <= 2 * (d_all - changepoint)
