@@ -26,6 +26,13 @@
   scenario_suite_glr the same 12-scenario grid scheduled by GLR-CUCB
                      (streaming detector) — the piecewise-regime policy the
                      recompute detector kept out of batched sweeps
+  chaos_suite        closed-loop adversaries + fault injection: the
+                     reactive-jammer/congestion grid as ONE sweep bucket
+                     (+ batch-of-1 parity bit), the reactive-vs-matched-
+                     open-loop scheduling shift (GLR-CUCB restarts AND
+                     regret must differ), and the FL degradation bits —
+                     quarantined trainer finite under 20% NaN corruption
+                     while the unguarded baseline diverges
   kernels            Pallas kernel wall-time vs jnp oracle (interpret mode)
   roofline           dry-run roofline table (reads experiments/dryrun/*.json)
 
@@ -860,6 +867,140 @@ def fl_batch_bench():
 
 
 # ---------------------------------------------------------------------------
+# chaos_suite — closed-loop adversaries + fault injection + degradation
+# ---------------------------------------------------------------------------
+
+def chaos_suite():
+    """Robustness record: the PR's acceptance criteria, re-measured per run.
+
+    Regret half: a reactive-jammer x congestion grid of one (T, N) lands in
+    ONE sweep bucket (closed-loop envs bucket by canonical-form signature
+    exactly like open-loop ones), with the single-case sweep re-checked
+    bitwise against the serial harness (batch-of-1 parity).  The follower
+    jammer is then compared with the MATCHED open-loop ``JammingOverlay``
+    on the same base scenario and seed: GLR-CUCB must experience a
+    different restart count AND different AoI regret — the evidence the
+    adversary actually closes the loop on the policy's schedule.
+
+    FL half: a 20% NaN-gradient ``FaultProcess`` through the async trainer
+    — the quarantined run must stay finite end to end (params, losses)
+    while the unguarded baseline diverges; a 2**24 byte-flip run must stay
+    on the data scale only when ``max_update_norm`` is set."""
+    from repro.core.channels import make_scenario
+    from repro.core.faults import make_fault
+    from repro.fl import AsyncFLConfig, AsyncFLTrainer
+    from repro.utils.tree import tree_flatten_concat
+
+    t_sim, n, m = (400, 8, 3) if QUICK else (4000, 8, 3)
+    sched = GLRCUCB(n, m, history=256, detector_stride=5)
+    base = PiecewiseProcess(n, t_sim, 4)
+
+    # --- ONE bucket for the whole closed-loop adversary grid ----------------
+    procs = (
+        [(f"reactive-jam/{v}", make_scenario("reactive_jammer", base=base,
+                                             strength=v))
+         for v in (0.6, 0.9)]
+        + [(f"congestion/{v}", make_scenario("congestion", n_channels=n,
+                                             horizon=t_sim, severity=v))
+           for v in (0.4, 0.8)]
+    )
+    cases = [SweepCase(name, sched, p, jax.random.fold_in(KEY, 300 + i), t_sim)
+             for i, (name, p) in enumerate(procs)]
+    results, report = sweep(cases, collect_curve=False, block=True)
+    buckets = len(report)
+    for name, _ in procs:
+        out = results[name]
+        row(f"chaos/{name}", 0.0,
+            f"regret={float(out['final_regret']):.0f};"
+            f"restarts={int(out['restarts'])};"
+            f"success_rate={float(out['success_rate']):.3f}")
+
+    # batch-of-1 parity: a single reactive case through the sweep vs serial
+    c0 = cases[0]
+    one, _ = sweep([SweepCase("one", c0.scheduler, c0.env, c0.key, t_sim)],
+                   collect_curve=False, block=False)
+    serial0 = simulate_aoi_regret(sched, c0.env, c0.key, t_sim,
+                                  collect_curve=False)
+    batch1_match = all(
+        np.array_equal(np.asarray(serial0[k]), np.asarray(one["one"][k]))
+        for k in serial0)
+    row("chaos/reactive-batch1-parity", 0.0, f"bitwise_match={batch1_match}")
+
+    # --- reactive vs matched open-loop: the scheduling-shift acceptance -----
+    react = make_scenario("reactive_jammer", base=base, strength=0.9)
+    openl = JammingOverlay(base=base, horizon=t_sim, strength=0.9)
+    rr = simulate_aoi_regret(sched, react, KEY, t_sim, collect_curve=False)
+    ro = simulate_aoi_regret(sched, openl, KEY, t_sim, collect_curve=False)
+    restart_shift = int(rr["restarts"]) != int(ro["restarts"])
+    regret_shift = float(rr["final_regret"]) != float(ro["final_regret"])
+    row("chaos/reactive-vs-openloop", 0.0,
+        f"reactive_regret={float(rr['final_regret']):.0f};"
+        f"openloop_regret={float(ro['final_regret']):.0f};"
+        f"reactive_restarts={int(rr['restarts'])};"
+        f"openloop_restarts={int(ro['restarts'])}")
+
+    # --- FL degradation bits -----------------------------------------------
+    rounds, m_fl, n_fl, d = (20 if QUICK else 40), 6, 9, 12
+
+    def loss_fn(p, x, y):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    params0 = {"w": jnp.full((d,), 0.5, jnp.float32)}
+    bx = jax.random.normal(jax.random.fold_in(KEY, 31),
+                           (rounds, m_fl, 1, 4, d))
+    by = jnp.sum(bx, -1) * 0.3
+    rkeys = jax.random.split(jax.random.fold_in(KEY, 32), rounds)
+    env_fl = make_stationary(jnp.full((n_fl,), 0.8))
+
+    def fl_final(faults, **cfg_kw):
+        cfg = AsyncFLConfig(n_clients=m_fl, n_channels=n_fl, **cfg_kw)
+        tr = AsyncFLTrainer(cfg=cfg, scheduler=GLRCUCB(n_fl, m_fl, history=64),
+                            env=env_fl, loss_fn=loss_fn, faults=faults)
+        st, mets = tr.run(tr.init(params0, KEY), bx, by, rkeys)
+        return tree_flatten_concat(st.params), mets
+
+    nan_faults = make_fault("nan_grads", rate=0.2)
+    w_q, mets_q = fl_final(nan_faults, quarantine=True)
+    w_u, _ = fl_final(nan_faults, quarantine=False)
+    quarantined_finite = bool(jnp.isfinite(w_q).all()
+                              and jnp.isfinite(mets_q["local_loss"]).all())
+    unguarded_diverged = not bool(jnp.isfinite(w_u).all())
+    row("chaos/fl-nan-20pct", 0.0,
+        f"quarantined_finite={quarantined_finite};"
+        f"unguarded_diverged={unguarded_diverged};"
+        f"final_loss={float(mets_q['local_loss'][-1]):.4f}")
+
+    flip = make_fault("byte_flip", rate=0.3, exponent=24.0)
+    w_c, _ = fl_final(flip, max_update_norm=1e3)
+    norm_cap_held = bool(jnp.isfinite(w_c).all()
+                         and float(jnp.abs(w_c).max()) < 1e3)
+    row("chaos/fl-byte-flip-capped", 0.0, f"norm_cap_held={norm_cap_held}")
+
+    BENCH["chaos_suite"] = {
+        "horizon": t_sim,
+        "grid_cases": len(cases),
+        "buckets": buckets,
+        "batch1_bitwise_match": bool(batch1_match),
+        "reactive_restarts": int(rr["restarts"]),
+        "openloop_restarts": int(ro["restarts"]),
+        "reactive_regret": round(float(rr["final_regret"]), 1),
+        "openloop_regret": round(float(ro["final_regret"]), 1),
+        "restart_shift": bool(restart_shift),
+        "regret_shift": bool(regret_shift),
+        "fl_rounds": rounds,
+        "nan_rate": 0.2,
+        "quarantined_finite": quarantined_finite,
+        "unguarded_diverged": unguarded_diverged,
+        "norm_cap_held": norm_cap_held,
+    }
+    row("chaos/summary", 0.0,
+        f"buckets={buckets};batch1={batch1_match};"
+        f"restart_shift={restart_shift};regret_shift={regret_shift};"
+        f"quarantined_finite={quarantined_finite};"
+        f"unguarded_diverged={unguarded_diverged}")
+
+
+# ---------------------------------------------------------------------------
 # kernels (interpret mode on CPU — relative numbers only)
 # ---------------------------------------------------------------------------
 
@@ -933,7 +1074,7 @@ def main() -> None:
     figures = ((scenario_suite, scenario_suite_glr) if args.scenarios else
                (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
                 glr_detector, hp_grid, scenario_suite, scenario_suite_glr,
-                fig3_fig4_fl, fl_batch_bench, kernels, roofline))
+                chaos_suite, fig3_fig4_fl, fl_batch_bench, kernels, roofline))
     for fig in figures:
         _figure(fig)
     # per-run compile accounting of the sweep executable cache: misses are

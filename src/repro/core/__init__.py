@@ -10,6 +10,8 @@
 - contribution:  marginal-utility estimation (Eq. 32-35, 41-43)
 - matching:      adaptive fairness-aware channel matching (Sec. V),
                  score source routed by scenario metadata
+- faults:        registry of client-side fault families (dropout, NaN
+                 gradients, byte-flip scaling) for robustness studies
 """
-from repro.core import aoi, channels, regret
+from repro.core import aoi, channels, faults, regret
 from repro.core.bandits import MExp3, GLRCUCB, AoIAware, RandomScheduler, oracle_assign

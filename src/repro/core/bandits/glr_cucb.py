@@ -225,6 +225,13 @@ class GLRCUCB(TracedHyperParams):
         aux: jnp.ndarray,
     ) -> GLRCUCBState:
         n = self.n_channels
+        # reward sanitization: the GLR statistics assume Bernoulli rewards in
+        # [0, 1]; a NaN/Inf observation (corrupted feedback path) would
+        # poison the carried prefix sums and every later detection.  Bitwise
+        # identity on valid {0, 1} streams: isfinite is true and clip is the
+        # identity there.
+        rewards = jnp.clip(
+            jnp.where(jnp.isfinite(rewards), rewards, 0.0), 0.0, 1.0)
         sched = jnp.zeros((n,), bool).at[channels].set(True)
         r_vec = jnp.zeros((n,), jnp.float32).at[channels].set(rewards)
 

@@ -3,17 +3,21 @@ registry-driven subsystem.
 
 Layering:
 
-* ``base``      — ``ChannelEnv``: the two canonical jittable forms every
+* ``base``      — ``ChannelEnv``: the three canonical jittable forms every
                   scenario lowers to (``(S, N)`` segment means / ``(T, N)``
-                  per-round mean table), plus stacking/batching helpers.
+                  per-round mean table / closed-loop ``"reactive"`` with a
+                  carried interaction state), plus stacking/batching
+                  helpers and the uniform closed-loop API
+                  (``interact_init``/``sample_dyn``/``interact_step``).
 * ``process``   — ``ChannelProcess``: hashable scenario descriptions
                   (static structure + traced scenario parameters), the
                   family registry, and vmapped realization
                   (``scenario_grid`` — one compiled realizer per family,
                   grid-of-1 bitwise equal to the serial ``realize``).
 * ``families``  — the built-in families: the paper's three regimes plus
-                  Gilbert–Elliott fading, mobility drift, SNR shadowing
-                  and a composable jamming overlay.
+                  Gilbert–Elliott fading, mobility drift, SNR shadowing,
+                  a composable jamming overlay, and the closed-loop
+                  reactive-jammer / load-congestion adversaries.
 
 The legacy module-level API (``make_stationary`` / ``make_piecewise`` /
 ``make_adversarial`` / ``random_piecewise_env`` / ``random_adversarial_env``
@@ -21,6 +25,7 @@ The legacy module-level API (``make_stationary`` / ``make_piecewise`` /
 tests run as before, now through the canonical forms.
 """
 from repro.core.channels.base import (
+    FORM_REACTIVE,
     FORM_SEGMENTS,
     FORM_TABLE,
     ChannelEnv,
@@ -30,6 +35,7 @@ from repro.core.channels.base import (
     make_adversarial,
     make_piecewise,
     make_stationary,
+    reactive_env,
     scenario_realize_key,
     segment_env,
     stack_envs,
@@ -37,6 +43,7 @@ from repro.core.channels.base import (
 )
 from repro.core.channels.process import (
     ChannelProcess,
+    check_knobs,
     example_scenario,
     make_scenario,
     realize_processes,
@@ -48,8 +55,10 @@ from repro.core.channels.families import (
     AdversarialProcess,
     GilbertElliottProcess,
     JammingOverlay,
+    LoadCongestionProcess,
     MobilityDriftProcess,
     PiecewiseProcess,
+    ReactiveJammerProcess,
     ShadowingProcess,
     StationaryProcess,
     random_adversarial_env,
@@ -61,8 +70,10 @@ __all__ = [
     "ChannelEnv",
     "FORM_SEGMENTS",
     "FORM_TABLE",
+    "FORM_REACTIVE",
     "segment_env",
     "table_env",
+    "reactive_env",
     "dense_means",
     "make_stationary",
     "make_piecewise",
@@ -76,6 +87,7 @@ __all__ = [
     "register_scenario",
     "registered_scenarios",
     "make_scenario",
+    "check_knobs",
     "example_scenario",
     "scenario_grid",
     "realize_processes",
@@ -87,6 +99,8 @@ __all__ = [
     "MobilityDriftProcess",
     "ShadowingProcess",
     "JammingOverlay",
+    "ReactiveJammerProcess",
+    "LoadCongestionProcess",
     # legacy generators (shims over the registry)
     "random_piecewise_env",
     "random_adversarial_env",

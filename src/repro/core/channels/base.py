@@ -4,9 +4,9 @@ scenario family reduces to.
 The spectrum is divided into ``N`` orthogonal Bernoulli sub-channels with
 state Good (1) / Bad (0).  Arbitrarily rich non-stationary scenarios
 (piecewise shifts, Markov fading, mobility drift, shadowing, jamming —
-see ``repro.core.channels.families``) all *lower* to one of exactly two
-jittable canonical forms, so ``means_at``/``sample``, the regret oracle
-and the batched ``repro.sim`` engines never branch per scenario kind:
+see ``repro.core.channels.families``) all *lower* to one of exactly three
+jittable canonical forms, so the env API, the regret oracle and the
+batched ``repro.sim`` engines never branch per scenario kind:
 
 * ``"segments"`` — per-segment means ``(S, N)`` with ascending breakpoint
   rounds ``(S-1,)``; ``mu_k(t)`` is a ``searchsorted`` gather.  S = 1 is
@@ -15,6 +15,32 @@ and the batched ``repro.sim`` engines never branch per scenario kind:
   ``mu_k(t)`` is a row gather.  A {0, 1}-valued table is the adversarial
   regime (sampling a Bernoulli with p in {0, 1} is deterministic and
   key-independent, exactly the old behaviour).
+* ``"reactive"`` — a *closed-loop* form: per-round means are a jittable
+  function of carried interaction state (an ``(N,)`` EMA of recent
+  scheduling pressure).  A ``(T, N)`` base table (the open-loop
+  component) is multiplicatively suppressed by a smooth threshold
+  response ``gain * sigmoid(sharp * (load - thresh))`` on the carried
+  load; the four reaction coefficients live in the ``react`` leaf.  One
+  parametrization covers both a lock-on follower jammer (high ``sharp``)
+  and smooth load congestion (low ``sharp``) — see ``families.py``.
+
+The first two forms are *open-loop*: means depend only on ``t``, and
+``means_at``/``sample`` apply.  The reactive form has no per-round mean
+table independent of the schedule, so those (and ``dense_means``) raise
+with guidance; simulation loops instead thread the interaction carry
+through the uniform closed-loop API, which degenerates to the open-loop
+one for the first two forms:
+
+    istate = env.interact_init()                      # (N,) zeros
+    states = env.sample_dyn(t, key, istate)           # == sample(t, key)
+                                                      #    for open-loop envs
+    istate = env.interact_step(istate, t, sched_mask) # identity for
+                                                      #    open-loop envs
+
+``repro.core.regret.simulate_aoi_regret`` and ``repro.fl.AsyncFLTrainer``
+carry ``istate`` in their scan state, so open-loop results are unchanged
+(the carry is dead state for them) while reactive scenarios close the
+loop on what the policy actually scheduled.
 
 ``ChannelEnv`` is a registered pytree: static structure (form + matcher
 score hint) in the aux data, arrays as children, so it can be closed over
@@ -34,6 +60,11 @@ import numpy as np
 
 FORM_SEGMENTS = "segments"
 FORM_TABLE = "table"
+FORM_REACTIVE = "reactive"
+
+# layout of the reactive form's ``react`` leaf: (4,) f32
+# [decay, gain, thresh, sharp] — see ``reactive_env``
+N_REACT = 4
 
 # fold_in tag deriving a scenario-realization key from a simulation key, so
 # env draws and policy randomness never share a PRNG stream (used by the
@@ -53,15 +84,19 @@ class ChannelEnv:
 
     Attributes
     ----------
-    form: ``"segments"`` | ``"table"`` (static).
+    form: ``"segments"`` | ``"table"`` | ``"reactive"`` (static).
     means: (S, N) per-segment Bernoulli means; a (1, N) placeholder for the
-        table form.
+        table/reactive forms.
     breaks: (S-1,) ascending breakpoint rounds (segment s covers
-        ``[breaks[s-1], breaks[s])``); (0,) for stationary / table.
-    table: (T, N) float32 per-round means for the table form, else a
-        (0, N) placeholder.
+        ``[breaks[s-1], breaks[s])``); (0,) for stationary / table / reactive.
+    table: (T, N) float32 per-round means for the table form — for the
+        reactive form the *base* (pre-suppression) means; else a (0, N)
+        placeholder.
     score_kind: ``"ucb"`` | ``"mean"`` (static) — which scheduler score the
         Sec.-V matcher should rank channels by under this scenario.
+    react: (4,) float32 ``[decay, gain, thresh, sharp]`` reaction
+        coefficients of the reactive form; a (0,) placeholder for the
+        open-loop forms.
     """
 
     form: str
@@ -69,29 +104,39 @@ class ChannelEnv:
     breaks: jnp.ndarray
     table: jnp.ndarray
     score_kind: str = "ucb"
+    react: jnp.ndarray = None
+
+    def __post_init__(self):
+        if self.react is None:
+            object.__setattr__(self, "react", jnp.zeros((0,), jnp.float32))
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (self.means, self.breaks, self.table), (self.form, self.score_kind)
+        return ((self.means, self.breaks, self.table, self.react),
+                (self.form, self.score_kind))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        means, breaks, table = children
-        return cls(aux[0], means, breaks, table, aux[1])
+        means, breaks, table, react = children
+        return cls(aux[0], means, breaks, table, aux[1], react)
 
     # -- properties --------------------------------------------------------
     @property
     def kind(self) -> str:
         """Legacy regime name.  ``"stationary"``/``"piecewise"``/
         ``"adversarial"`` keep their pre-registry values; stochastic table
-        scenarios report ``"table"``."""
+        scenarios report ``"table"``, closed-loop ones ``"reactive"``."""
+        if self.form == FORM_REACTIVE:
+            return FORM_REACTIVE
         if self.form == FORM_TABLE:
             return "adversarial" if self.score_kind == "mean" else FORM_TABLE
         return "stationary" if self.means.shape[-2] == 1 else "piecewise"
 
     @property
     def n_channels(self) -> int:
-        return self.table.shape[-1] if self.form == FORM_TABLE else self.means.shape[-1]
+        if self.form in (FORM_TABLE, FORM_REACTIVE):
+            return self.table.shape[-1]
+        return self.means.shape[-1]
 
     @property
     def n_segments(self) -> int:
@@ -99,9 +144,11 @@ class ChannelEnv:
 
     @property
     def horizon(self) -> int:
-        """Table length T for the table form; segment envs extend to any t
-        (the last segment is open-ended) and report 0."""
-        return self.table.shape[-2] if self.form == FORM_TABLE else 0
+        """Table length T for the table/reactive forms; segment envs extend
+        to any t (the last segment is open-ended) and report 0."""
+        if self.form in (FORM_TABLE, FORM_REACTIVE):
+            return self.table.shape[-2]
+        return 0
 
     # -- behaviour ---------------------------------------------------------
     def _check_t(self, t) -> None:
@@ -128,8 +175,24 @@ class ChannelEnv:
                 "simulation horizon"
             )
 
+    def _check_open_loop(self, what: str) -> None:
+        if self.form == FORM_REACTIVE:
+            raise ValueError(
+                f"ChannelEnv.{what}: a \"reactive\" env has no open-loop "
+                "means — mu_k(t) depends on the carried interaction state "
+                "(what the policy scheduled).  Thread the carry through the "
+                "closed-loop API instead: istate = env.interact_init(); "
+                "states = env.sample_dyn(t, key, istate); istate = "
+                "env.interact_step(istate, t, sched_mask).  The engines "
+                "(repro.core.regret.simulate_aoi_regret, repro.fl."
+                "AsyncFLTrainer, repro.sim.sweep) do this automatically; "
+                "env.table holds the pre-suppression base means."
+            )
+
     def means_at(self, t: jnp.ndarray) -> jnp.ndarray:
-        """Instantaneous per-channel success means ``mu_k(t)`` — (N,)."""
+        """Instantaneous per-channel success means ``mu_k(t)`` — (N,).
+        Open-loop forms only; reactive envs raise (use ``means_dyn``)."""
+        self._check_open_loop("means_at")
         if self.form == FORM_TABLE:
             self._check_t(t)
             t = jnp.clip(t, 0, self.table.shape[0] - 1)
@@ -142,9 +205,73 @@ class ChannelEnv:
     def sample(self, t: jnp.ndarray, key: jax.Array) -> jnp.ndarray:
         """Draw the Good/Bad state of all N channels in round ``t`` — (N,)
         f32 in {0, 1}.  Deterministic tables (means in {0, 1}) are
-        key-independent: Bernoulli(0/1) has a single outcome."""
+        key-independent: Bernoulli(0/1) has a single outcome.  Open-loop
+        forms only; reactive envs raise (use ``sample_dyn``)."""
+        self._check_open_loop("sample")
         mu = self.means_at(t)
         return jax.random.bernoulli(key, mu).astype(jnp.float32)
+
+    # -- closed-loop API (uniform across forms) ----------------------------
+    def interact_init(self) -> jnp.ndarray:
+        """Initial interaction-state carry — (N,) f32 zeros for EVERY form.
+
+        The carry is an EMA of recent per-channel scheduling pressure
+        ("load").  Open-loop forms never read it, but returning the same
+        fixed-shape pytree for all forms lets the simulation scans thread
+        one carry unconditionally — no per-kind branching in the engines
+        (XLA dead-code-eliminates the unused carry for open-loop envs).
+        """
+        return jnp.zeros((self.n_channels,), jnp.float32)
+
+    def means_dyn(self, t: jnp.ndarray, istate: jnp.ndarray) -> jnp.ndarray:
+        """Per-channel means given the interaction carry — (N,).
+
+        Open-loop forms ignore ``istate`` and return ``means_at(t)``
+        unchanged.  The reactive form suppresses the base table row
+        multiplicatively by a smooth threshold response on the carried
+        load, so means can never exceed the base (gain is clipped to
+        [0, 1]):
+
+            mu(t) = table[t] * (1 - clip(gain, 0, 1)
+                                    * sigmoid(sharp * (load - thresh)))
+        """
+        if self.form != FORM_REACTIVE:
+            return self.means_at(t)
+        self._check_t(t)
+        t = jnp.clip(t, 0, self.table.shape[0] - 1)
+        base = self.table[t]
+        gain = jnp.clip(self.react[1], 0.0, 1.0)
+        supp = gain * jax.nn.sigmoid(self.react[3] * (istate - self.react[2]))
+        return base * (1.0 - supp)
+
+    def sample_dyn(self, t: jnp.ndarray, key: jax.Array,
+                   istate: jnp.ndarray) -> jnp.ndarray:
+        """Closed-loop ``sample``: Good/Bad states given the interaction
+        carry — identical to ``sample(t, key)`` for open-loop forms."""
+        if self.form != FORM_REACTIVE:
+            return self.sample(t, key)
+        mu = self.means_dyn(t, istate)
+        return jax.random.bernoulli(key, mu).astype(jnp.float32)
+
+    def interact_step(self, istate: jnp.ndarray, t: jnp.ndarray,
+                      sched_mask: jnp.ndarray) -> jnp.ndarray:
+        """Advance the interaction carry with this round's schedule.
+
+        ``sched_mask`` is the (N,) f32 {0, 1} indicator of channels the
+        policy actually used in round ``t``.  Open-loop forms return the
+        carry unchanged (identity — the whole closed-loop path folds away
+        under XLA).  The reactive form updates the per-channel load EMA:
+
+            load' = clip(decay, 0, 1) * load + (1 - decay) * sched_mask
+
+        The environment observes the schedule with a one-round delay —
+        round t's states are drawn from the carry *before* this update —
+        which is the physical causality of a follower jammer.
+        """
+        if self.form != FORM_REACTIVE:
+            return istate
+        decay = jnp.clip(self.react[0], 0.0, 1.0)
+        return decay * istate + (1.0 - decay) * sched_mask
 
 
 # ---------------------------------------------------------------------------
@@ -181,6 +308,34 @@ def table_env(table, score_kind: str = "ucb") -> ChannelEnv:
     )
 
 
+def reactive_env(table, decay, gain, thresh, sharp,
+                 score_kind: str = "ucb") -> ChannelEnv:
+    """Lower to the ``"reactive"`` closed-loop canonical form.
+
+    ``table`` is the (T, N) *base* (pre-suppression) mean table — any
+    open-loop scenario expands to it via ``dense_means``.  The four
+    reaction coefficients parameterize the load response (see
+    ``ChannelEnv.means_dyn``/``interact_step``); they may be traced
+    scalars, so a grid of reactive scenarios vmaps through one realizer.
+    """
+    table = jnp.asarray(table, jnp.float32)
+    assert table.ndim == 2
+    react = jnp.stack([
+        jnp.asarray(decay, jnp.float32),
+        jnp.asarray(gain, jnp.float32),
+        jnp.asarray(thresh, jnp.float32),
+        jnp.asarray(sharp, jnp.float32),
+    ])
+    return ChannelEnv(
+        form=FORM_REACTIVE,
+        means=jnp.zeros((1, table.shape[1]), jnp.float32),
+        breaks=jnp.zeros((0,), jnp.int32),
+        table=table,
+        score_kind=score_kind,
+        react=react,
+    )
+
+
 def make_stationary(mus) -> ChannelEnv:
     """Fixed unknown means ``mu_k`` — the S = 1 segment form."""
     mus = jnp.asarray(mus, jnp.float32)
@@ -206,8 +361,19 @@ def dense_means(env: ChannelEnv, horizon: int) -> jnp.ndarray:
 
     The overlay scenarios (jamming) compose on this form.  Segment envs
     expand to any horizon (the last segment is open-ended); a table env
-    must have been realized for at least ``horizon`` rounds.
+    must have been realized for at least ``horizon`` rounds.  Reactive
+    envs have NO dense open-loop table (their means depend on what the
+    policy scheduled) and raise.
     """
+    if env.form == FORM_REACTIVE:
+        raise ValueError(
+            "dense_means: a \"reactive\" env has no open-loop mean table — "
+            "its per-round means are a function of the carried interaction "
+            "state, so they only exist inside a simulation that threads the "
+            "carry (repro.core.regret.simulate_aoi_regret / repro.fl."
+            "AsyncFLTrainer / repro.sim.sweep).  env.table holds the "
+            "pre-suppression base means if you need the open-loop component."
+        )
     if env.form == FORM_TABLE:
         if env.table.shape[0] < horizon:
             raise ValueError(
@@ -266,5 +432,8 @@ def env_batch_size(env: ChannelEnv) -> int:
     Unbatched envs carry 2-D ``means``/``table`` leaves ((S, N) / (T, N));
     ``stack_envs`` adds one leading axis.
     """
-    lead = env.table.shape if env.form == FORM_TABLE else env.means.shape
+    if env.form in (FORM_TABLE, FORM_REACTIVE):
+        lead = env.table.shape
+    else:
+        lead = env.means.shape
     return 1 if len(lead) == 2 else lead[0]

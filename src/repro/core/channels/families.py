@@ -15,11 +15,22 @@ is a registered ``ChannelProcess`` (see ``process.py``): static structure
   mobility         smooth sinusoidal mean drift (user motion)  (table)
   shadowing        SNR-threshold shadowing, AR(1) log-normal   (table)
   jamming          bursty jammer overlay on ANY base scenario  (table)
+  reactive_jammer  closed-loop follower jammer on a base       (reactive)
+  congestion       closed-loop self-interference / cell load   (reactive)
 
 The jamming overlay composes: it realizes its base scenario, expands it
 to the dense per-round mean table, and multiplicatively suppresses the
 targeted channels while the (Markov on/off) jammer is active — so it can
 never raise a mean above the base (property-tested).
+
+The two ``"reactive"``-form families close the loop on the *policy*: the
+canonical reactive env carries an (N,) EMA of recent scheduling pressure
+and suppresses means through a smooth threshold response on it (see
+``base.ChannelEnv.means_dyn``).  One parametrization covers both: the
+follower jammer locks onto channels whose load EMA clears a threshold
+(high ``sharpness``), congestion degrades every channel smoothly with its
+own load (low ``softness``).  Open-loop-only helpers (``dense_means``,
+``JammingOverlay``) reject reactive scenarios with guidance.
 
 The legacy ``random_piecewise_env`` / ``random_adversarial_env``
 generators are thin shims over the matching families.
@@ -33,10 +44,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.channels.base import (
+    FORM_REACTIVE,
     FORM_SEGMENTS,
     FORM_TABLE,
     ChannelEnv,
     dense_means,
+    reactive_env,
     segment_env,
     table_env,
 )
@@ -336,6 +349,12 @@ class JammingOverlay(ChannelProcess):
     TRACED = ("jam_on", "jam_off", "strength")
 
     def __post_init__(self):
+        if getattr(self.base, "FORM", None) == FORM_REACTIVE:
+            raise ValueError(
+                "JammingOverlay: cannot compose onto a \"reactive\" base "
+                "scenario — its means depend on the interaction carry, not "
+                "a precomputable table (dense_means would raise).  Use the "
+                "'reactive_jammer' family for a closed-loop jammer instead.")
         if self.horizon == 0 and not getattr(self.base, "horizon", 0):
             raise ValueError(
                 "JammingOverlay: base scenario has no horizon (e.g. "
@@ -390,6 +409,132 @@ class JammingOverlay(ChannelProcess):
     @classmethod
     def example(cls, n_channels: int, horizon: int) -> "JammingOverlay":
         return cls(base=PiecewiseProcess.example(n_channels, horizon))
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class ReactiveJammerProcess(ChannelProcess):
+    """Closed-loop follower jammer — suppresses recently-scheduled channels.
+
+    The adversary observes which channels the scheduler actually used
+    (with a one-round delay) and tracks a per-channel EMA of that
+    scheduling pressure with memory ``memory``; once a channel's EMA
+    clears ``lock_thresh`` the jammer locks on and multiplicatively
+    suppresses the channel by factor ``(1 - strength)``.  ``sharpness``
+    sets how hard the lock-on transition is (high = near-step).  Unlike
+    the open-loop ``JammingOverlay`` — whose burst schedule is committed
+    at realization — this jammer *chases the policy*: a bandit that keeps
+    exploiting its best channels feeds the EMA and gets those exact
+    channels degraded, which is what forces the GLR detector to restart
+    and the AoI regret to shift relative to the matched open-loop overlay
+    (the ``chaos_suite`` benchmark records both).
+
+    The base scenario supplies the open-loop component: it is realized
+    and expanded to a dense (T, N) table exactly like ``JammingOverlay``'s
+    base, then packed into the ``"reactive"`` canonical form with the four
+    reaction coefficients (see ``base.reactive_env``).
+    """
+
+    base: ChannelProcess
+    horizon: int = 0               # 0: inherit the base scenario's horizon
+    memory: float = 0.8            # EMA memory of the jammer's observations
+    strength: float = 0.9          # suppression factor once locked on
+    lock_thresh: float = 0.3       # EMA level that triggers lock-on
+    sharpness: float = 16.0        # lock-on transition steepness
+
+    FAMILY = "reactive_jammer"
+    FORM = FORM_REACTIVE
+    TRACED = ("memory", "strength", "lock_thresh", "sharpness")
+
+    def __post_init__(self):
+        if getattr(self.base, "FORM", None) == FORM_REACTIVE:
+            raise ValueError(
+                "ReactiveJammerProcess: base scenario must be open-loop "
+                "(the reactive form carries ONE interaction state; nesting "
+                "reactive scenarios is not defined)")
+        if self.horizon == 0 and not getattr(self.base, "horizon", 0):
+            raise ValueError(
+                "ReactiveJammerProcess: base scenario has no horizon (e.g. "
+                "stationary); pass an explicit horizon=")
+
+    @property
+    def n_channels(self) -> int:
+        return self.base.n_channels
+
+    @property
+    def _horizon(self) -> int:
+        return self.horizon if self.horizon else self.base.horizon
+
+    def env_signature(self):
+        return (FORM_REACTIVE, self._horizon, self.n_channels, self.SCORE_KIND)
+
+    def params(self):
+        """Jammer knobs plus the base scenario's params nested under
+        "base" (the ``JammingOverlay`` idiom)."""
+        sp = super().params()
+        base_sp = self.base.params()
+        if base_sp:
+            sp["base"] = base_sp
+        return sp
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        base_env = self.base._realize(
+            key, sp.get("base", self.base.params()) if isinstance(sp, dict)
+            else self.base.params())
+        mu = dense_means(base_env, self._horizon)
+        return reactive_env(
+            mu, decay=sp["memory"], gain=sp["strength"],
+            thresh=sp["lock_thresh"], sharp=sp["sharpness"])
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "ReactiveJammerProcess":
+        return cls(base=PiecewiseProcess.example(n_channels, horizon))
+
+
+@register_scenario
+@dataclasses.dataclass(frozen=True)
+class LoadCongestionProcess(ChannelProcess):
+    """Closed-loop self-interference: throughput degrades with recent load.
+
+    Models cell/cross-traffic congestion: the more a channel has been
+    scheduled recently (per-channel load EMA with memory ``memory``), the
+    lower its success mean — a *smooth* degradation of up to fraction
+    ``severity`` with half-max at load ``knee`` and transition scale
+    ``softness`` (deliberately gentle, unlike the jammer's near-step
+    lock-on).  This is the regime where a greedy best-channel policy is
+    self-limiting and load-spreading policies gain.
+
+    The open-loop component is a stationary draw: per-channel base means
+    uniform in [mean_low, mean_high], broadcast to the (T, N) base table
+    of the ``"reactive"`` canonical form.
+    """
+
+    n_channels: int
+    horizon: int
+    memory: float = 0.9
+    severity: float = 0.6
+    knee: float = 0.5
+    softness: float = 4.0
+    mean_low: float = 0.5
+    mean_high: float = 0.95
+
+    FAMILY = "congestion"
+    FORM = FORM_REACTIVE
+    TRACED = ("memory", "severity", "knee", "softness",
+              "mean_low", "mean_high")
+
+    def _realize(self, key: jax.Array, sp) -> ChannelEnv:
+        mus = jax.random.uniform(
+            key, (self.n_channels,), minval=sp["mean_low"],
+            maxval=sp["mean_high"])
+        table = jnp.broadcast_to(mus[None, :], (self.horizon, self.n_channels))
+        return reactive_env(
+            table, decay=sp["memory"], gain=sp["severity"],
+            thresh=sp["knee"], sharp=sp["softness"])
+
+    @classmethod
+    def example(cls, n_channels: int, horizon: int) -> "LoadCongestionProcess":
+        return cls(n_channels=n_channels, horizon=horizon)
 
 
 # ---------------------------------------------------------------------------

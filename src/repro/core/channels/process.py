@@ -38,7 +38,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bandits.base import TracedHyperParams, stack_params
-from repro.core.channels.base import FORM_SEGMENTS, FORM_TABLE, ChannelEnv
+from repro.core.channels.base import (
+    FORM_REACTIVE,
+    FORM_SEGMENTS,
+    FORM_TABLE,
+    ChannelEnv,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,8 +86,8 @@ class ChannelProcess(TracedHyperParams):
         score hint.  Scenarios with equal signatures lower to stackable
         envs, so the sweep driver merges them — across families — into one
         simulation bucket per canonical form."""
-        if self.FORM == FORM_TABLE:
-            return (FORM_TABLE, self.horizon, self.n_channels, self.SCORE_KIND)
+        if self.FORM in (FORM_TABLE, FORM_REACTIVE):
+            return (self.FORM, self.horizon, self.n_channels, self.SCORE_KIND)
         return (FORM_SEGMENTS, self.n_segments, self.n_channels, self.SCORE_KIND)
 
     # -- realization -------------------------------------------------------
@@ -130,14 +135,42 @@ def registered_scenarios() -> Dict[str, Type[ChannelProcess]]:
     return dict(_REGISTRY)
 
 
+def check_knobs(cls: type, label: str, kwargs: Dict[str, Any]) -> None:
+    """Eagerly reject unknown constructor knobs with guidance.
+
+    A typo'd knob name must fail at construction — listing the family's
+    valid knobs — rather than surface later as a confusing ``TypeError``
+    deep in a sweep, or (worse, for ``dict``-taking future families) fall
+    through to defaults silently.  Shared with the fault registry
+    (``repro.core.faults.make_fault``).
+    """
+    valid = {f.name for f in dataclasses.fields(cls) if f.init}
+    unknown = sorted(set(kwargs) - valid)
+    if unknown:
+        raise ValueError(
+            f"{label}: unknown knob(s) {unknown}; valid knobs for "
+            f"{cls.__name__}: {sorted(valid)}")
+    missing = sorted(
+        f.name for f in dataclasses.fields(cls)
+        if f.init and f.default is dataclasses.MISSING
+        and f.default_factory is dataclasses.MISSING  # type: ignore[misc]
+        and f.name not in kwargs)
+    if missing:
+        raise ValueError(
+            f"{label}: missing required knob(s) {missing}; valid knobs for "
+            f"{cls.__name__}: {sorted(valid)}")
+
+
 def make_scenario(family: str, **kwargs) -> ChannelProcess:
-    """Construct a scenario by registry name."""
+    """Construct a scenario by registry name.  Unknown or missing knobs
+    raise eagerly with the family's valid knob list."""
     try:
         cls = _REGISTRY[family]
     except KeyError:
         raise ValueError(
             f"make_scenario: unknown family {family!r}; registered: "
             f"{sorted(_REGISTRY)}") from None
+    check_knobs(cls, f"make_scenario({family!r})", kwargs)
     return cls(**kwargs)
 
 

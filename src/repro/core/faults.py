@@ -1,0 +1,201 @@
+"""``FaultProcess`` — registry-driven client-side fault injection.
+
+Mirrors the channel-scenario subsystem (``repro.core.channels.process``):
+a fault family is a frozen, hashable dataclass whose scalar knobs are
+*traced* hyper-parameters (the ``TracedHyperParams`` mixin), registered
+under a family name, and applied as a pure jittable function.  Faults are
+injected by ``repro.fl.AsyncFLTrainer._round_impl`` between ``local_sgd``
+and the Eq.-6 buffer carry — exactly the point where a real deployment's
+client-side failures corrupt the upload path:
+
+  dropout    client unavailable this round (straggler/crash): it neither
+             finishes local training nor transmits — the classic
+             dropout/straggler mask.
+  nan_grads  non-finite gradient corruption: the client's flattened (P,)
+             update row is replaced with NaN (or Inf for a fraction of
+             hits) — fp overflow / bad batch / poisoned loss.
+  byte_flip  update scaling by 2**exponent on hit rows — a flipped
+             exponent bit in transit; finite but norm-exploded, the case
+             the quarantine's ``max_update_norm`` cap exists for.
+
+``inject(key, t, updates)`` returns ``(updates', dropped)`` where
+``dropped`` is the (M,) f32 {0, 1} unavailability mask.  All randomness
+comes from ``key`` (derive it per round: the trainer folds a fault tag
+into the round key, so the no-fault PRNG stream is untouched); all knobs
+are read from the ``sp`` pytree inside ``_inject``, never from ``self``,
+so fault grids vmap through one program exactly like scenario grids —
+stack instances with ``repro.core.bandits.base.stack_params`` and vmap
+``inject`` over the stacked ``params`` axis, or vmap over keys for
+per-seed draws.
+
+Graceful degradation lives downstream: the round runtime's quarantine
+(Step 4 of ``repro.fl.round``) masks non-finite / norm-exploded buffer
+rows out of aggregation, revokes their ``has_update`` and re-issues the
+global model so the client retries with a fresh update — see
+``src/repro/sim/README.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams
+from repro.core.channels.process import check_knobs
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProcess(TracedHyperParams):
+    """Base class: a hashable fault-family description.
+
+    Subclasses set ``FAMILY``/``TRACED`` and implement ``_inject``:
+
+      _inject(key, t, updates, sp)  the generator: (M, P) fresh client
+                                    updates in, (updates', dropped) out;
+                                    every traced knob read from ``sp``.
+      example()                     a default instance — lets tests and
+                                    benchmarks enumerate the registry.
+    """
+
+    FAMILY: ClassVar[str] = ""
+
+    def _inject(self, key: jax.Array, t: jnp.ndarray,
+                updates: jnp.ndarray, sp) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        raise NotImplementedError
+
+    @classmethod
+    def example(cls) -> "FaultProcess":
+        return cls()
+
+    def inject(self, key: jax.Array, t: jnp.ndarray, updates: jnp.ndarray,
+               params=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Apply the fault family to a round's fresh (M, P) updates.
+
+        ``params`` optionally overrides the traced knobs (``self.params()``
+        pytree) — the grid-vmap hook, same convention as
+        ``ChannelProcess.realize``.  Returns ``(updates', dropped)`` with
+        ``dropped`` an (M,) f32 {0, 1} client-unavailability mask.
+        """
+        if params is None or not jax.tree_util.tree_leaves(params):
+            params = self.params()
+        return self._inject(key, t, updates, params)
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.channels.process)
+# ---------------------------------------------------------------------------
+
+_FAULT_REGISTRY: Dict[str, Type[FaultProcess]] = {}
+
+
+def register_fault(cls: Type[FaultProcess]) -> Type[FaultProcess]:
+    """Class decorator: add a fault family to the registry."""
+    if not cls.FAMILY:
+        raise ValueError(f"register_fault: {cls.__name__} has no FAMILY name")
+    if cls.FAMILY in _FAULT_REGISTRY:
+        raise ValueError(f"register_fault: duplicate family {cls.FAMILY!r}")
+    _FAULT_REGISTRY[cls.FAMILY] = cls
+    return cls
+
+
+def registered_faults() -> Dict[str, Type[FaultProcess]]:
+    """Name -> class for every registered fault family (a copy)."""
+    return dict(_FAULT_REGISTRY)
+
+
+def make_fault(family: str, **kwargs) -> FaultProcess:
+    """Construct a fault process by registry name.  Unknown or missing
+    knobs raise eagerly with the family's valid knob list (same eager
+    check as ``make_scenario``)."""
+    try:
+        cls = _FAULT_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"make_fault: unknown family {family!r}; registered: "
+            f"{sorted(_FAULT_REGISTRY)}") from None
+    check_knobs(cls, f"make_fault({family!r})", kwargs)
+    return cls(**kwargs)
+
+
+def example_fault(family: str) -> FaultProcess:
+    """The family's default example instance."""
+    try:
+        cls = _FAULT_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"example_fault: unknown family {family!r}; registered: "
+            f"{sorted(_FAULT_REGISTRY)}") from None
+    return cls.example()
+
+
+# ---------------------------------------------------------------------------
+# built-in families
+# ---------------------------------------------------------------------------
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class DropoutFaults(FaultProcess):
+    """Per-round Bernoulli client unavailability (straggler/crash).
+
+    A dropped client neither finishes local training (its buffered G~ is
+    kept, Eq. 6) nor transmits this round — the runtime zeroes both its
+    Eq.-6 refresh and its transmission success.
+    """
+
+    rate: float = 0.1
+
+    FAMILY = "dropout"
+    TRACED = ("rate",)
+
+    def _inject(self, key, t, updates, sp):
+        m = updates.shape[0]
+        dropped = jax.random.bernoulli(
+            key, jnp.clip(sp["rate"], 0.0, 1.0), (m,)).astype(jnp.float32)
+        return updates, dropped
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class NaNGradFaults(FaultProcess):
+    """Non-finite gradient corruption: hit rows become all-NaN (or all-Inf
+    for fraction ``inf_frac`` of hits) — fp overflow, bad batches, or a
+    poisoned loss on the client."""
+
+    rate: float = 0.1
+    inf_frac: float = 0.0
+
+    FAMILY = "nan_grads"
+    TRACED = ("rate", "inf_frac")
+
+    def _inject(self, key, t, updates, sp):
+        m = updates.shape[0]
+        k0, k1 = jax.random.split(key)
+        hit = jax.random.bernoulli(k0, jnp.clip(sp["rate"], 0.0, 1.0), (m,))
+        use_inf = jax.random.bernoulli(
+            k1, jnp.clip(sp["inf_frac"], 0.0, 1.0), (m,))
+        bad = jnp.where(use_inf, jnp.inf, jnp.nan)
+        corrupted = jnp.where(hit[:, None], bad[:, None], updates)
+        return corrupted, jnp.zeros((m,), jnp.float32)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class ByteFlipFaults(FaultProcess):
+    """Exponent-bit flip in transit: hit rows are scaled by
+    ``2**exponent`` — finite but norm-exploded.  Caught by the
+    quarantine's ``max_update_norm`` cap (a plain finiteness check would
+    let it through and destroy the global model in one round)."""
+
+    rate: float = 0.05
+    exponent: float = 24.0
+
+    FAMILY = "byte_flip"
+    TRACED = ("rate", "exponent")
+
+    def _inject(self, key, t, updates, sp):
+        m = updates.shape[0]
+        hit = jax.random.bernoulli(key, jnp.clip(sp["rate"], 0.0, 1.0), (m,))
+        factor = jnp.where(hit, jnp.exp2(sp["exponent"]), 1.0)
+        return updates * factor[:, None], jnp.zeros((m,), jnp.float32)

@@ -27,6 +27,9 @@ class SimCarry(NamedTuple):
     cum_regret: jnp.ndarray
     cum_var_pi: jnp.ndarray
     cum_var_star: jnp.ndarray
+    env_state: jnp.ndarray      # (N,) closed-loop interaction carry; dead
+                                # state (zeros, identity-stepped) for the
+                                # open-loop canonical forms
 
 
 def simulate_aoi_regret_impl(
@@ -53,12 +56,19 @@ def simulate_aoi_regret_impl(
     def step(carry: SimCarry, inp):
         t, k = inp
         k_env, k_sel = jax.random.split(k)
-        states = env.sample(t, k_env)
+        # closed-loop API: identical to env.sample(t, k_env) for the
+        # open-loop forms; reactive envs read the carried interaction state
+        # (which reflects schedules up to t-1 — one-round observation delay)
+        states = env.sample_dyn(t, k_env, carry.env_state)
 
         channels, aux = scheduler.select(carry.sched_state, t, k_sel, carry.aoi_pi)
         rewards = states[channels]
         sched_state = scheduler.update(carry.sched_state, t, channels, rewards, aux)
         aoi_pi = update_aoi(carry.aoi_pi, rewards > 0.5)
+        # the environment reacts to what the POLICY used; the oracle is the
+        # clairvoyant counterfactual on the same realized channel states
+        sched_mask = jnp.zeros((env.n_channels,), jnp.float32).at[channels].set(1.0)
+        env_state = env.interact_step(carry.env_state, t, sched_mask)
 
         _, star_success = oracle_assign(states, carry.aoi_star, m)
         aoi_star = update_aoi(carry.aoi_star, star_success)
@@ -66,7 +76,8 @@ def simulate_aoi_regret_impl(
         cum_regret = carry.cum_regret + jnp.sum(aoi_pi - aoi_star)
         cum_var_pi = carry.cum_var_pi + aoi_variance(aoi_pi)
         cum_var_star = carry.cum_var_star + aoi_variance(aoi_star)
-        new = SimCarry(sched_state, aoi_pi, aoi_star, cum_regret, cum_var_pi, cum_var_star)
+        new = SimCarry(sched_state, aoi_pi, aoi_star, cum_regret, cum_var_pi,
+                       cum_var_star, env_state)
         out = (
             (cum_regret, cum_var_pi, jnp.sum(rewards))
             if collect_curve
@@ -81,13 +92,14 @@ def simulate_aoi_regret_impl(
         cum_regret=jnp.zeros(()),
         cum_var_pi=jnp.zeros(()),
         cum_var_star=jnp.zeros(()),
+        env_state=env.interact_init(),
     )
     ts = jnp.arange(horizon)
     keys = jax.random.split(jax.random.fold_in(key, 1), horizon)
     carry, (regret_curve, var_curve, successes) = jax.lax.scan(
         step, carry0, (ts, keys)
     )
-    return {
+    out = {
         "regret": regret_curve if collect_curve else carry.cum_regret,
         "final_regret": carry.cum_regret,
         "cum_aoi_var": var_curve if collect_curve else carry.cum_var_pi,
@@ -97,6 +109,13 @@ def simulate_aoi_regret_impl(
         "aoi_star": carry.aoi_star,
         "success_rate": jnp.sum(successes) / (horizon * m),
     }
+    # restart-counting detectors (GLR-CUCB) expose their count: the
+    # chaos_suite benchmark and the reactive-adversary tests read it.
+    # Static (trace-time) capability check, so the result-dict structure
+    # stays fixed per scheduler family — buckets are per-policy anyway.
+    if hasattr(carry.sched_state, "restarts"):
+        out["restarts"] = carry.sched_state.restarts
+    return out
 
 
 @partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve"))
@@ -117,7 +136,10 @@ def simulate_aoi_regret(
     ``ChannelProcess`` — a scenario is then drawn with the realization key
     the sweep driver would derive (``scenario_realize_key(key)``), so this
     serial path and a ``repro.sim.sweep`` over the same (process, key)
-    cases compute identical environments.
+    cases compute identical environments.  All three canonical forms are
+    supported: the scan threads the closed-loop interaction carry, which
+    is dead state for open-loop envs and the feedback channel for
+    ``"reactive"`` ones (the env reacts to the policy's schedule).
 
     Returns dict with:
       regret:       (T,) cumulative AoI regret curve (or final scalar)

@@ -4,14 +4,33 @@ One round, entirely inside jit:
 
   Step 1  clients in S_{t-1} receive w_t (everyone else trains nothing and
           keeps its buffered update G~, Eq. 6)
-  Step 2  E local SGD epochs, vmapped over clients (Eq. 5)
+  Step 2  E local SGD epochs, vmapped over clients (Eq. 5); an optional
+          ``FaultProcess`` (``repro.core.faults``) then corrupts the fresh
+          updates / drops clients — injected exactly between local
+          training and the Eq.-6 buffer carry, where real client-side
+          failures live
   Step 3  MAB scheduler picks M channels; the adaptive matcher assigns
           them to clients by priority (Eq. 39-40); the channel env draws
-          Good/Bad; S_t = clients whose channel was Good
+          Good/Bad (closed-loop forms read — and are then advanced with —
+          the carried interaction state); S_t = clients whose channel was
+          Good
   Step 4  server aggregates  w <- w - eta_s/|S_t| * sum_{i in S_t} zeta_i G~_i
           via the fused `weighted_aggregate` kernel (Eq. 7), updates AoI
           (Eq. 8), the contribution buffers (Eq. 41-42), zeta (Eq. 43)
           and the bandit statistics.
+
+          With ``cfg.quarantine`` (default on), Step 4 is gated by a
+          graceful-degradation mask: buffer rows that are non-finite or
+          (with ``cfg.max_update_norm > 0``) norm-exploded are zeroed out
+          of the aggregation, their ``has_update`` is revoked (the
+          poisoned G~ is discarded) and the owner re-enters S_t so it
+          retrains and retries at its next successful schedule.  A
+          staleness cap (``cfg.staleness_cap > 0``) additionally rejects
+          buffered updates older than tau rounds (Hu et al.-style age
+          cutoff) — rejected-but-delivered clients also re-enter S_t.
+          AoI resets only on *aggregated* deliveries, and an all-Bad round
+          is a bitwise no-op on ``params`` (a ``where`` on |S_t| > 0, not
+          an add of zero — adding 0.0 would still flip -0.0 bits).
 
 Client updates are carried *flattened* (M, P) — the same layout the
 contribution estimator needs, and the layout the Pallas aggregation
@@ -41,6 +60,10 @@ from repro.fl.client import local_sgd
 from repro.kernels import ops
 from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
 
+# fold target for the per-round fault key: keeps the env/select PRNG splits
+# bitwise identical whether or not a FaultProcess is attached
+_FAULT_TAG = 0xFA17
+
 
 class AsyncFLState(NamedTuple):
     params: Any                    # global model w_t
@@ -54,6 +77,10 @@ class AsyncFLState(NamedTuple):
     sched_state: Any
     matcher_state: MatcherState
     t: jnp.ndarray
+    env_state: jnp.ndarray         # (N,) closed-loop interaction carry (dead
+                                   # zeros for open-loop canonical forms)
+    staleness: jnp.ndarray         # (M,) age of the buffered G~ in rounds —
+                                   # NOT AoI, which resets only on aggregation
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +93,12 @@ class AsyncFLConfig:
     matcher_beta: float = 0.5
     use_matching: bool = True      # ablation switch (paper's "aware allocation")
     use_zeta: bool = True          # ablation: Eq. 43 weights vs uniform
+    # graceful degradation (Step 4 gate).  quarantine=True is numerically
+    # identical to the legacy path on healthy data — it only changes which
+    # rows *could* aggregate, and healthy rows always pass.
+    quarantine: bool = True        # mask non-finite buffer rows out of Eq. 7
+    max_update_norm: float = 0.0   # >0: also quarantine rows with ||G~|| above
+    staleness_cap: int = 0         # >0: reject buffered G~ older than tau rounds
 
 
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: identity hash, so the
@@ -78,6 +111,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
                                    # explicitly for per-seed scenario draws)
     loss_fn: Callable              # (params, x, y) -> scalar loss
     proxy_loss_fn: Optional[Callable] = None  # flat params -> scalar (Eq. 35)
+    faults: Optional[Any] = None   # a repro.core.faults FaultProcess, or None
 
     def __post_init__(self):
         if isinstance(self.env, ChannelProcess):
@@ -100,6 +134,8 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             sched_state=init_with_hp(self.scheduler, key, hp),
             matcher_state=AdaptiveMatcher(self.cfg.matcher_beta).init(),
             t=jnp.zeros((), jnp.int32),
+            env_state=self.env.interact_init(),
+            staleness=jnp.ones((m,), jnp.float32),
         )
 
     def init_batch(
@@ -146,9 +182,23 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             return tree_flatten_concat(g_tree), loss
 
         fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
-        active = state.last_success[:, None]
-        buffers = active * fresh_updates + (1.0 - active) * state.buffers   # Eq. 6
-        has_update = jnp.maximum(state.has_update, state.last_success)
+
+        # ---- fault injection: between training and the Eq.-6 carry ---------
+        if self.faults is not None:
+            # the fault stream lives on its own fold of the round key, so a
+            # faultless trainer's PRNG consumption is bitwise untouched
+            k_fault = jax.random.fold_in(key, _FAULT_TAG)
+            fresh_updates, dropped = self.faults.inject(k_fault, t, fresh_updates)
+        else:
+            dropped = jnp.zeros((m,), jnp.float32)
+
+        # Eq. 6 via `where`, not the arithmetic lerp: a corrupted fresh row
+        # must not leak NaN into an inactive client's kept buffer (0 * NaN).
+        # A dropped client neither refreshes its buffer nor transmits.
+        active = state.last_success * (1.0 - dropped)
+        buffers = jnp.where(active[:, None] > 0.5, fresh_updates, state.buffers)
+        has_update = jnp.maximum(state.has_update, active)
+        staleness = jnp.where(active > 0.5, 1.0, state.staleness + 1.0)
 
         # ---- Step 3: schedule + match + transmit ---------------------------
         channels, aux = self.scheduler.select(state.sched_state, t, k_sel, state.aoi)
@@ -165,22 +215,70 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             assignment = channels
             _, matcher_state = matcher.priorities(
                 state.matcher_state, state.contrib, state.aoi)
-        ch_states = self.env.sample(t, k_env)
+        # closed-loop API: identical to env.sample(t, k_env) for open-loop
+        # forms; reactive envs read the carried interaction state (schedules
+        # up to t-1 — one-round observation delay) and then advance it with
+        # the channels the matcher actually used this round
+        ch_states = self.env.sample_dyn(t, k_env, state.env_state)
+        sched_mask = jnp.zeros((cfg.n_channels,), jnp.float32)
+        sched_mask = sched_mask.at[assignment].set(1.0)
+        env_state = self.env.interact_step(state.env_state, t, sched_mask)
         success = (ch_states[assignment] > 0.5).astype(jnp.float32)
         success = success * has_update        # a client with no update yet can't help
-        n_succ = jnp.sum(success)
+        success = success * (1.0 - dropped)   # and a dropped one can't transmit
 
-        # ---- Step 4: aggregate (Eq. 7, fused kernel) ------------------------
+        # ---- Step 4: quarantine gate + aggregate (Eq. 7, fused kernel) ------
+        if cfg.quarantine:
+            row_ok = jnp.all(jnp.isfinite(buffers), axis=1)
+            if cfg.max_update_norm > 0.0:
+                row_ok = row_ok & (
+                    jnp.linalg.norm(buffers, axis=1) <= cfg.max_update_norm)
+            row_ok = row_ok.astype(jnp.float32)
+        else:
+            row_ok = jnp.ones((m,), jnp.float32)
+        if cfg.staleness_cap > 0:
+            fresh_ok = (staleness <= float(cfg.staleness_cap)).astype(jnp.float32)
+        else:
+            fresh_ok = jnp.ones((m,), jnp.float32)
+        agg_mask = success * row_ok * fresh_ok
+        n_succ = jnp.sum(agg_mask)
+
         zeta = state.zeta if cfg.use_zeta else jnp.full((m,), 1.0 / m)
-        scale = success * zeta * (m / jnp.maximum(n_succ, 1.0))
-        agg_flat = ops.weighted_aggregate(buffers, scale)     # (P,) f32
+        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        if cfg.quarantine:
+            # zero quarantined rows BEFORE the kernel: 0 * NaN = NaN, so a
+            # zero aggregation weight alone cannot contain a poisoned row
+            agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
+        else:
+            agg_buffers = buffers
+        agg_flat = ops.weighted_aggregate(agg_buffers, scale)   # (P,) f32
         step_vec = -cfg.server_lr / m * agg_flat              # normalized mean step
         delta = tree_unflatten_concat(step_vec, state.params)
-        params = jax.tree_util.tree_map(
-            lambda p_, d: (p_ + d.astype(p_.dtype)), state.params, delta)
+        if cfg.quarantine:
+            # all-Bad/all-quarantined round: bitwise no-op on params (adding
+            # a zero delta would still flip -0.0 bits)
+            any_agg = n_succ > 0.0
+            params = jax.tree_util.tree_map(
+                lambda p_, d: jnp.where(any_agg, p_ + d.astype(p_.dtype), p_),
+                state.params, delta)
+        else:
+            params = jax.tree_util.tree_map(
+                lambda p_, d: (p_ + d.astype(p_.dtype)), state.params, delta)
+
+        # degraded-path bookkeeping: poisoned buffers are discarded (the
+        # owner must retrain before it can transmit again), and quarantined
+        # or stale-rejected-but-delivered clients re-enter S_t so they retry
+        # with a fresh update at their next successful schedule — without
+        # the re-grant they could never regain has_update and would starve.
+        bad_row = 1.0 - row_ok
+        stale_reject = success * row_ok * (1.0 - fresh_ok)
+        has_update = has_update * row_ok
+        last_success = jnp.maximum(agg_mask, jnp.maximum(bad_row, stale_reject))
 
         # ---- bookkeeping: AoI, bandit, contribution, zeta -------------------
-        aoi = update_aoi(state.aoi, success > 0.5)
+        # AoI resets only on *aggregated* deliveries — a quarantined or stale
+        # upload improved nobody's freshness at the server
+        aoi = update_aoi(state.aoi, agg_mask > 0.5)
         rewards = ch_states[assignment]
         sched_state = self.scheduler.update(
             state.sched_state, t, assignment, rewards, aux)
@@ -188,7 +286,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         # global params serve as the anchor — uploads happened this round.
         params_flat = tree_flatten_concat(params)
         contrib_buf = update_buffer(
-            state.contrib_buf, success > 0.5, buffers,
+            state.contrib_buf, agg_mask > 0.5, agg_buffers,
             jnp.broadcast_to(params_flat, buffers.shape))
         contrib = marginal_contribution(contrib_buf, zeta, self.proxy_loss_fn)
         new_zeta = aggregation_weights(contrib)
@@ -197,7 +295,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             params=params,
             buffers=buffers,
             has_update=has_update,
-            last_success=success,
+            last_success=last_success,
             aoi=aoi,
             contrib_buf=contrib_buf,
             contrib=contrib,
@@ -205,10 +303,18 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             sched_state=sched_state,
             matcher_state=matcher_state,
             t=t + 1,
+            env_state=env_state,
+            staleness=staleness,
         )
+        # losses of clients that actually trained this round; the isfinite
+        # guard keeps the *metric* finite even while a faulty client's loss
+        # blows up (identical arithmetic on healthy rounds: loss_ok == 1)
+        loss_ok = jnp.isfinite(local_losses).astype(jnp.float32)
+        loss_w = active * loss_ok
         metrics = {
-            "local_loss": jnp.sum(local_losses * state.last_success)
-            / jnp.maximum(jnp.sum(state.last_success), 1.0),
+            "local_loss": jnp.sum(
+                jnp.where(loss_ok > 0.5, local_losses, 0.0) * active)
+            / jnp.maximum(jnp.sum(loss_w), 1.0),
             "n_success": n_succ,
             "mean_aoi": jnp.mean(aoi),
             "aoi_var": aoi_variance(aoi),

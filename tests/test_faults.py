@@ -1,0 +1,308 @@
+"""Fault injection + graceful degradation: the chaos half of the PR.
+
+Covers the ``repro.core.faults`` registry, the quarantine / staleness /
+retry semantics of ``AsyncFLTrainer._round_impl`` Step 4, and the
+GLR-CUCB reward sanitization — including the PR's acceptance checks:
+
+  * an all-Bad round leaves ``params`` BITWISE unchanged and every metric
+    finite, for every registered scheduling policy;
+  * a NaN-gradient client never perturbs the global model and re-enters
+    training so it retries at its next successful schedule;
+  * under 20% NaN corruption the quarantined trainer's loss stays finite
+    while the unguarded baseline diverges;
+  * the streaming-GLR detector state stays finite under corrupted reward
+    streams (property-based, runs under the conftest hypothesis stub and
+    the real package alike).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandits import (
+    AoIAware,
+    ChannelAwareAsync,
+    GLRCUCB,
+    LyapunovSched,
+    MExp3,
+    RandomScheduler,
+    RoundRobinScheduler,
+)
+from repro.core.bandits.base import stack_params
+from repro.core.channels import make_stationary
+from repro.core.faults import (
+    FaultProcess,
+    example_fault,
+    make_fault,
+    registered_faults,
+)
+from repro.fl import AsyncFLConfig, AsyncFLTrainer
+from repro.utils.tree import tree_flatten_concat
+
+KEY = jax.random.PRNGKey(0)
+M, N, D = 6, 9, 12
+
+
+def _loss(p, x, y):
+    return jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _params():
+    return {"w": jnp.full((D,), 0.5, jnp.float32)}
+
+
+def _data(rounds, seed=0):
+    bx = jax.random.normal(jax.random.PRNGKey(seed), (rounds, M, 1, 4, D))
+    by = jnp.sum(bx, -1) * 0.3
+    return bx, by
+
+
+def _trainer(env, sched=None, faults=None, **cfg_kw):
+    cfg = AsyncFLConfig(n_clients=M, n_channels=N, **cfg_kw)
+    sched = sched or GLRCUCB(N, M, history=64)
+    return AsyncFLTrainer(cfg=cfg, scheduler=sched, env=env, loss_fn=_loss,
+                          faults=faults)
+
+
+def _bits(tree):
+    return np.asarray(tree_flatten_concat(tree)).view(np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_fault_registry_covers_the_three_families():
+    fams = registered_faults()
+    assert {"dropout", "nan_grads", "byte_flip"} <= set(fams)
+    for name, cls in fams.items():
+        f = example_fault(name)
+        assert isinstance(f, FaultProcess) and cls.FAMILY == name
+        u2, dropped = f.inject(KEY, jnp.array(0), jnp.ones((M, 4)))
+        assert u2.shape == (M, 4) and dropped.shape == (M,)
+
+
+def test_make_fault_rejects_unknown_knobs():
+    with pytest.raises(ValueError, match="unknown knob"):
+        make_fault("nan_grads", rte=0.2)
+    with pytest.raises(ValueError, match="unknown family"):
+        make_fault("cosmic_rays")
+
+
+def test_fault_grids_vmap_through_one_inject():
+    """Traced-knob contract: a stacked grid of fault params flows through
+    one vmapped inject, and per-seed draws vmap over keys."""
+    grid = [make_fault("nan_grads", rate=r) for r in (0.0, 1.0)]
+    sp = stack_params(grid)
+    u = jnp.ones((M, 4))
+    out, _ = jax.vmap(
+        lambda p, k: grid[0].inject(k, jnp.array(0), u, params=p))(
+        sp, jax.random.split(KEY, 2))
+    n_bad = [int(jnp.sum(~jnp.isfinite(o).all(1))) for o in out]
+    assert n_bad == [0, M]
+    per_seed, _ = jax.vmap(
+        lambda k: make_fault("dropout", rate=0.5).inject(k, jnp.array(0), u))(
+        jax.random.split(KEY, 4))
+    assert per_seed.shape == (4, M, 4)
+
+
+# ---------------------------------------------------------------------------
+# all-Bad round: bitwise no-op, every policy
+# ---------------------------------------------------------------------------
+
+_POLICIES = {
+    "glr-cucb": GLRCUCB(N, M, history=64),
+    "mexp3": MExp3(N, M),
+    "aoi-aware": AoIAware(base=GLRCUCB(N, M, history=64)),
+    "channel-aware": ChannelAwareAsync(N, M),
+    "lyapunov": LyapunovSched(N, M),
+    "random": RandomScheduler(N, M),
+    "round-robin": RoundRobinScheduler(N, M),
+}
+
+
+@pytest.mark.parametrize("policy", sorted(_POLICIES))
+def test_all_bad_round_is_bitwise_noop_on_params(policy):
+    env = make_stationary(jnp.zeros((N,)))      # every transmission fails
+    trainer = _trainer(env, sched=_POLICIES[policy])
+    state = trainer.init(_params(), KEY)
+    bx, by = _data(3)
+    for t in range(3):
+        state2, mets = trainer.round(state, bx[t], by[t],
+                                     jax.random.fold_in(KEY, t))
+        assert (_bits(state.params) == _bits(state2.params)).all()
+        for k, v in mets.items():
+            assert bool(jnp.isfinite(v).all()), (policy, k)
+        state = state2
+
+
+# ---------------------------------------------------------------------------
+# quarantine: poisoned rows never reach the model, and owners retry
+# ---------------------------------------------------------------------------
+
+def test_nan_buffer_row_is_quarantined_and_retried():
+    env = make_stationary(jnp.ones((N,)))       # every transmission succeeds
+    trainer = _trainer(env)
+    state = trainer.init(_params(), KEY)
+    bx, by = _data(4)
+    state, _ = trainer.round(state, bx[0], by[0], jax.random.fold_in(KEY, 0))
+
+    # poison client 0's buffered update between rounds; it is not in
+    # S_{t-1} (would retrain and overwrite the buffer otherwise), so the
+    # NaN row is what arrives at Step 4 when its channel succeeds
+    poisoned = state._replace(
+        buffers=state.buffers.at[0].set(jnp.nan),
+        last_success=state.last_success.at[0].set(0.0),
+        has_update=state.has_update.at[0].set(1.0))
+    nxt, mets = trainer.round(poisoned, bx[1], by[1], jax.random.fold_in(KEY, 1))
+
+    # the model never sees the NaN — and DID move (others aggregated)
+    assert bool(jnp.isfinite(tree_flatten_concat(nxt.params)).all())
+    assert not (_bits(poisoned.params) == _bits(nxt.params)).all()
+    assert bool(jnp.isfinite(mets["local_loss"]))
+    # the poisoned G~ is discarded and the owner re-enters training ...
+    assert float(nxt.has_update[0]) == 0.0
+    assert float(nxt.last_success[0]) == 1.0
+    assert float(nxt.aoi[0]) > 1.0              # nothing of theirs aggregated
+    # ... so the NEXT round it retrains, transmits a clean update and
+    # rejoins the aggregate (all-Good channels: scheduled for sure)
+    after, _ = trainer.round(nxt, bx[2], by[2], jax.random.fold_in(KEY, 2))
+    assert bool(jnp.isfinite(after.buffers[0]).all())
+    assert float(after.aoi[0]) == 1.0
+
+
+def test_quarantined_params_match_excluding_the_bad_client():
+    """With quarantine, a NaN row must be arithmetically equivalent to that
+    client simply failing its transmission (success path is identical)."""
+    env = make_stationary(jnp.ones((N,)))
+    trainer = _trainer(env)
+    state = trainer.init(_params(), KEY)
+    bx, by = _data(2)
+    state, _ = trainer.round(state, bx[0], by[0], jax.random.fold_in(KEY, 0))
+
+    poisoned = state._replace(
+        buffers=state.buffers.at[0].set(jnp.nan),
+        last_success=state.last_success.at[0].set(0.0),
+        has_update=state.has_update.at[0].set(1.0))
+    # reference: same round where client 0 just has nothing to send
+    reference = state._replace(
+        buffers=state.buffers.at[0].set(0.0),
+        last_success=state.last_success.at[0].set(0.0),
+        has_update=state.has_update.at[0].set(0.0))
+    a, _ = trainer.round(poisoned, bx[1], by[1], jax.random.fold_in(KEY, 1))
+    b = trainer.round(reference, bx[1], by[1], jax.random.fold_in(KEY, 1))[0]
+    np.testing.assert_array_equal(
+        np.asarray(tree_flatten_concat(a.params)),
+        np.asarray(tree_flatten_concat(b.params)))
+
+
+def test_quarantine_keeps_training_finite_under_20pct_nan():
+    """The acceptance check: 20% NaN-gradient corruption — quarantined
+    trainer stays finite for the whole run, unguarded baseline diverges."""
+    env = make_stationary(jnp.full((N,), 0.8))
+    faults = make_fault("nan_grads", rate=0.2)
+    bx, by = _data(40)
+    keys = jax.random.split(jax.random.PRNGKey(5), 40)
+
+    guarded = _trainer(env, faults=faults, quarantine=True)
+    st_g, mets_g = guarded.run(guarded.init(_params(), KEY), bx, by, keys)
+    assert bool(jnp.isfinite(tree_flatten_concat(st_g.params)).all())
+    assert bool(jnp.isfinite(mets_g["local_loss"]).all())
+
+    unguarded = _trainer(env, faults=faults, quarantine=False)
+    st_u, _ = unguarded.run(unguarded.init(_params(), KEY), bx, by, keys)
+    assert not bool(jnp.isfinite(tree_flatten_concat(st_u.params)).all())
+
+
+def test_norm_cap_quarantines_byte_flip_rows():
+    env = make_stationary(jnp.full((N,), 0.9))
+    faults = make_fault("byte_flip", rate=0.3, exponent=24.0)
+    bx, by = _data(30)
+    keys = jax.random.split(jax.random.PRNGKey(6), 30)
+
+    capped = _trainer(env, faults=faults, max_update_norm=1e3)
+    st_c, _ = capped.run(capped.init(_params(), KEY), bx, by, keys)
+    w_c = tree_flatten_concat(st_c.params)
+    assert bool(jnp.isfinite(w_c).all())
+    assert float(jnp.abs(w_c).max()) < 1e3     # 2**24-scaled rows never landed
+
+    # finiteness alone is NOT enough: the uncapped trainer absorbs the
+    # finite-but-exploded rows and is blown far off the data scale (often
+    # all the way to overflow/NaN through the subsequent local training)
+    uncapped = _trainer(env, faults=faults)
+    st_u, _ = uncapped.run(uncapped.init(_params(), KEY), bx, by, keys)
+    w_u = tree_flatten_concat(st_u.params)
+    blown = (not bool(jnp.isfinite(w_u).all())) or float(jnp.abs(w_u).max()) > 1e3
+    assert blown
+
+
+def test_dropout_faults_keep_buffers_and_invariants():
+    env = make_stationary(jnp.full((N,), 0.9))
+    faults = make_fault("dropout", rate=0.4)
+    trainer = _trainer(env, faults=faults)
+    state = trainer.init(_params(), KEY)
+    bx, by = _data(20)
+    keys = jax.random.split(jax.random.PRNGKey(7), 20)
+    fin, mets = trainer.run(state, bx, by, keys)
+    assert bool(jnp.isfinite(tree_flatten_concat(fin.params)).all())
+    assert bool(jnp.isfinite(mets["local_loss"]).all())
+    # dropped rounds age the buffered updates
+    assert float(fin.staleness.max()) >= 1.0
+
+
+def test_staleness_cap_rejects_old_buffers_without_starvation():
+    """tau = 1: only updates trained THIS round aggregate.  Buffered stale
+    updates are rejected on delivery but their owners re-enter S_t, so the
+    system keeps aggregating (no deadlock) and AoI stays bounded."""
+    env = make_stationary(jnp.full((N,), 0.7))
+    trainer = _trainer(env, staleness_cap=1)
+    bx, by = _data(30)
+    keys = jax.random.split(jax.random.PRNGKey(8), 30)
+    fin, mets = trainer.run(trainer.init(_params(), KEY), bx, by, keys)
+    assert bool(jnp.isfinite(tree_flatten_concat(fin.params)).all())
+    assert float(jnp.sum(mets["n_success"])) > 0.0
+    assert float(fin.aoi.max()) < 30.0
+
+
+def test_fault_free_trainer_prng_stream_is_untouched():
+    """Attaching faults must not shift the env/select PRNG splits: a
+    DropoutFaults(rate=0) trainer is bitwise identical to faults=None."""
+    env = make_stationary(jnp.full((N,), 0.8))
+    bx, by = _data(10)
+    keys = jax.random.split(jax.random.PRNGKey(9), 10)
+    plain = _trainer(env)
+    zeroed = _trainer(env, faults=make_fault("dropout", rate=0.0))
+    a, _ = plain.run(plain.init(_params(), KEY), bx, by, keys)
+    b, _ = zeroed.run(zeroed.init(_params(), KEY), bx, by, keys)
+    assert (_bits(a.params) == _bits(b.params)).all()
+
+
+# ---------------------------------------------------------------------------
+# GLR-CUCB reward sanitization (property-based; stub-compatible strategies)
+# ---------------------------------------------------------------------------
+
+_BAD_REWARDS = [float("nan"), float("inf"), -float("inf"), 1e30, -7.0, 0.5]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.sampled_from(_BAD_REWARDS))
+def test_glr_state_stays_finite_under_corrupted_rewards(seed, bad):
+    """Corrupted feedback (NaN/Inf/out-of-range rewards) must never poison
+    the detector's carried prefix-sum state or the UCB means; selection
+    keeps returning valid channel indices throughout."""
+    sched = GLRCUCB(N, M, history=32)
+    key = jax.random.PRNGKey(seed)
+    state = sched.init(key)
+    for t in range(12):
+        k = jax.random.fold_in(key, t)
+        channels, aux = sched.select(state, jnp.array(t), k,
+                                     jnp.ones((M,), jnp.float32))
+        assert int(channels.min()) >= 0 and int(channels.max()) < N
+        rewards = jax.random.bernoulli(k, 0.6, (M,)).astype(jnp.float32)
+        rewards = rewards.at[t % M].set(bad)    # one corrupt slot per round
+        state = sched.update(state, jnp.array(t), channels, rewards, aux)
+        for name in ("mu_tilde", "counts", "cum", "total", "base"):
+            leaf = getattr(state, name)
+            assert bool(jnp.isfinite(leaf).all()), name
+        assert 0.0 <= float(state.mu_tilde.max()) <= 1.0

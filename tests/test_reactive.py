@@ -1,0 +1,180 @@
+"""Closed-loop ("reactive") canonical form: unit laws, engine threading,
+sweep bucketing, and the adversary-shifts-scheduling acceptance check.
+
+The reactive form is the third canonical ``ChannelEnv`` form: a (T, N)
+pre-suppression base table plus a 4-scalar reaction law
+``react = [decay, gain, thresh, sharp]``.  Per-round means are
+
+    means_dyn(t, s) = table[t] * (1 - gain * sigmoid(sharp * (s - thresh)))
+
+with the (N,) interaction carry ``s`` advanced by
+
+    interact_step(s, t, sched) = decay * s + (1 - decay) * sched
+
+— i.e. the environment suppresses channels the policy has recently
+scheduled.  The same four methods exist on EVERY form (open-loop envs
+return ``means_at``/``sample`` results and an identity step), so engines
+never branch per kind.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB
+from repro.core.channels import (
+    FORM_REACTIVE,
+    JammingOverlay,
+    LoadCongestionProcess,
+    ReactiveJammerProcess,
+    make_scenario,
+    make_stationary,
+    reactive_env,
+    stack_envs,
+)
+from repro.core.channels.families import PiecewiseProcess
+from repro.core.regret import simulate_aoi_regret
+from repro.sim.sweep import SweepCase, group_cases, sweep
+
+N, M, T = 8, 3, 600
+
+
+def _env(decay=0.5, gain=0.8, thresh=0.3, sharp=16.0, mu=0.7):
+    table = jnp.full((T, N), mu, jnp.float32)
+    return reactive_env(table, decay=decay, gain=gain, thresh=thresh,
+                        sharp=sharp)
+
+
+# ---------------------------------------------------------------------------
+# unit laws of the reaction dynamics
+# ---------------------------------------------------------------------------
+
+def test_reaction_law_suppresses_scheduled_channels():
+    env = _env()
+    assert env.form == FORM_REACTIVE
+    t = jnp.array(0)
+    idle = env.means_dyn(t, jnp.zeros((N,)))
+    busy = env.means_dyn(t, jnp.ones((N,)))
+    # suppression is monotone in the carry, and never negative / amplifying
+    assert np.all(np.asarray(busy) < np.asarray(idle))
+    assert np.all(np.asarray(busy) >= 0.0)
+    assert np.all(np.asarray(idle) <= 0.7 + 1e-7)
+
+
+def test_interact_step_is_a_leaky_schedule_integrator():
+    env = _env(decay=0.5)
+    sched = jnp.zeros((N,)).at[0].set(1.0)
+    s = env.interact_init()
+    assert s.shape == (N,) and float(jnp.sum(s)) == 0.0
+    s1 = env.interact_step(s, jnp.array(0), sched)
+    s2 = env.interact_step(s1, jnp.array(1), sched)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(0.5 * sched))
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(0.75 * sched))
+    # unscheduled channels decay toward zero
+    s3 = env.interact_step(s2, jnp.array(2), jnp.zeros((N,)))
+    assert float(s3[0]) == pytest.approx(0.375)
+
+
+def test_open_loop_envs_degenerate_exactly():
+    """On open-loop forms the closed-loop API folds away: sample_dyn is
+    bitwise sample, interact_step is the identity on the carry."""
+    env = make_stationary(jnp.linspace(0.1, 0.9, N))
+    key = jax.random.PRNGKey(3)
+    s = env.interact_init()
+    t = jnp.array(5)
+    np.testing.assert_array_equal(
+        np.asarray(env.sample_dyn(t, key, s)), np.asarray(env.sample(t, key)))
+    s2 = env.interact_step(s, t, jnp.ones((N,)))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+
+
+def test_reactive_envs_stack():
+    envs = [make_scenario("congestion", n_channels=N, horizon=T)
+            .realize(jax.random.PRNGKey(i)) for i in range(2)]
+    stacked = stack_envs(envs)
+    assert stacked.table.shape == (2, T, N)
+    assert stacked.react.shape == (2, 4)
+
+
+# ---------------------------------------------------------------------------
+# knob hygiene (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_make_scenario_rejects_unknown_and_missing_knobs():
+    with pytest.raises(ValueError, match="unknown knob"):
+        make_scenario("congestion", n_channels=N, horizon=T, sevrity=0.5)
+    with pytest.raises(ValueError, match="missing required knob"):
+        make_scenario("congestion", n_channels=N)
+    with pytest.raises(ValueError, match="unknown knob"):
+        make_scenario("reactive_jammer",
+                      base=PiecewiseProcess.example(N, T), strenght=0.9)
+
+
+# ---------------------------------------------------------------------------
+# engine threading + sweep bucketing
+# ---------------------------------------------------------------------------
+
+def test_reactive_cases_share_one_sweep_bucket():
+    """Two congestion cases and a reactive_jammer of the same (T, N) carry
+    one env_signature -> ONE simulation bucket; results are bitwise equal
+    to the serial harness on the same (process, key) pairs."""
+    sched = GLRCUCB(n_channels=N, n_clients=M, history=256)
+    base = PiecewiseProcess.example(N, T)
+    procs = {
+        "cong-a": make_scenario("congestion", n_channels=N, horizon=T),
+        "cong-b": make_scenario("congestion", n_channels=N, horizon=T,
+                                severity=0.9),
+        "jam-r": make_scenario("reactive_jammer", base=base),
+    }
+    cases = [SweepCase(name=k, scheduler=sched, env=p,
+                       key=jax.random.PRNGKey(i), horizon=T)
+             for i, (k, p) in enumerate(sorted(procs.items()))]
+    assert len(group_cases(cases)) == 1
+    results, report = sweep(cases, collect_curve=False)
+    assert report[0].batch == 3
+    for i, (k, p) in enumerate(sorted(procs.items())):
+        serial = simulate_aoi_regret(sched, p, jax.random.PRNGKey(i), T,
+                                     collect_curve=False)
+        np.testing.assert_array_equal(
+            np.asarray(results[k]["final_regret"]),
+            np.asarray(serial["final_regret"]))
+        np.testing.assert_array_equal(
+            np.asarray(results[k]["restarts"]), np.asarray(serial["restarts"]))
+
+
+def test_reactive_jammer_shifts_scheduling_vs_matched_open_loop():
+    """The PR's acceptance check: against the SAME base scenario and seed,
+    the closed-loop follower jammer must change what GLR-CUCB experiences —
+    different restart count AND different AoI regret — relative to the
+    matched open-loop JammingOverlay, because it suppresses whatever the
+    policy converges onto instead of a fixed random channel subset."""
+    base = PiecewiseProcess.example(N, T)
+    sched = GLRCUCB(n_channels=N, n_clients=M, history=256)
+    key = jax.random.PRNGKey(0)
+    react = make_scenario("reactive_jammer", base=base)
+    openl = JammingOverlay(base=base, horizon=T, strength=0.9)
+    rr = simulate_aoi_regret(sched, react, key, T, collect_curve=False)
+    ro = simulate_aoi_regret(sched, openl, key, T, collect_curve=False)
+    assert int(rr["restarts"]) != int(ro["restarts"])
+    assert float(rr["final_regret"]) != float(ro["final_regret"])
+    # the follower jammer is the strictly harder adversary
+    assert float(rr["final_regret"]) > float(ro["final_regret"])
+
+
+def test_congestion_drags_down_a_greedy_policy():
+    """Under congestion, camping on one channel decays its mean; the
+    realized success rate must sit measurably below the idle base means."""
+    proc = LoadCongestionProcess(n_channels=N, horizon=T, severity=0.9,
+                                 memory=0.95, knee=0.2)
+    sched = GLRCUCB(n_channels=N, n_clients=M, history=256)
+    out = simulate_aoi_regret(sched, proc, jax.random.PRNGKey(7), T,
+                              collect_curve=False)
+    env = proc.realize(jax.random.PRNGKey(7))
+    idle_best = float(jnp.sort(env.table[0])[-M:].mean())
+    assert float(out["success_rate"]) < idle_best - 0.05
+
+
+def test_reactive_jammer_rejects_reactive_base():
+    inner = make_scenario("congestion", n_channels=N, horizon=T)
+    with pytest.raises(ValueError, match="reactive"):
+        ReactiveJammerProcess(base=inner)

@@ -8,13 +8,17 @@ canonical-form contract of ``repro.core.channels.base``:
 
   * realized means live in [0, 1] (they are Bernoulli parameters);
   * segment-form envs carry strictly ascending breakpoints inside (0, T);
-  * table-form envs carry a float32 ``(horizon, N)`` table;
+  * table-form and reactive-form envs carry a float32 ``(horizon, N)``
+    table (reactive additionally a ``(4,)`` reaction-law leaf);
   * same-family realizations stack (``stack_envs``) and round-trip
     (``env_batch_size``, per-row slices bitwise equal to the serial
     realizations);
-  * the jamming overlay composes onto every base family without ever
-    raising a mean above the base scenario's (suppression is
-    multiplicative) — and never above 1;
+  * the jamming overlay composes onto every OPEN-LOOP base family without
+    ever raising a mean above the base scenario's (suppression is
+    multiplicative) — and never above 1; reactive bases are rejected with
+    guidance (their suppression is state-dependent, not a static table);
+  * open-loop-only helpers (``dense_means``) raise on reactive envs with
+    guidance instead of silently returning pre-suppression base means;
   * ``scenario_grid`` rows are bitwise equal to the serial ``realize``
     (the grid-of-1/PR 3 invariant, here for G = 2).
 
@@ -30,7 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
+import pytest
+
 from repro.core.channels import (
+    FORM_REACTIVE,
     FORM_SEGMENTS,
     FORM_TABLE,
     JammingOverlay,
@@ -45,6 +52,11 @@ from repro.core.channels import (
 N, T = 5, 48       # one (N, T) for the whole suite: realizer jit caches stay warm
 
 FAMILIES = sorted(registered_scenarios())
+# families whose realized envs are open-loop (static mean tables/segments) —
+# the jamming overlay and dense_means only make sense on these
+OPEN_LOOP_FAMILIES = sorted(
+    f for f, c in registered_scenarios().items() if c.FORM != FORM_REACTIVE)
+REACTIVE_FAMILIES = sorted(set(FAMILIES) - set(OPEN_LOOP_FAMILIES))
 
 
 def _key(seed: int) -> jax.Array:
@@ -58,10 +70,12 @@ def _leaves_equal(a, b) -> bool:
 
 
 def test_registry_covers_the_paper_and_beyond():
-    # the three paper regimes plus >= 4 richer families must stay registered
+    # the three paper regimes plus >= 4 richer families must stay registered,
+    # among them the two closed-loop (reactive-form) adversaries
     assert {"stationary", "piecewise", "adversarial"} <= set(FAMILIES)
     extra = set(FAMILIES) - {"stationary", "piecewise", "adversarial"}
     assert len(extra) >= 4, FAMILIES
+    assert {"reactive_jammer", "congestion"} <= set(REACTIVE_FAMILIES)
 
 
 @settings(max_examples=30, deadline=None)
@@ -79,10 +93,16 @@ def test_realized_means_in_unit_interval(family, seed):
 def test_canonical_form_shapes_and_dtypes(family, seed):
     proc = example_scenario(family, N, T)
     env = proc.realize(_key(seed))
-    assert env.form in (FORM_SEGMENTS, FORM_TABLE)
-    assert (env.form, env.horizon if env.form == FORM_TABLE else env.n_segments,
+    assert env.form in (FORM_SEGMENTS, FORM_TABLE, FORM_REACTIVE)
+    table_lead = env.form in (FORM_TABLE, FORM_REACTIVE)
+    assert (env.form, env.horizon if table_lead else env.n_segments,
             env.n_channels, env.score_kind) == proc.env_signature()
-    if env.form == FORM_TABLE:
+    if env.form == FORM_REACTIVE:
+        assert env.react.shape == (4,)
+        assert env.react.dtype == jnp.float32
+    else:
+        assert env.react.shape == (0,)            # placeholder
+    if table_lead:
         assert env.table.shape == (T, N)
         assert env.table.dtype == jnp.float32
         assert env.means.shape == (1, N)          # placeholder
@@ -111,12 +131,12 @@ def test_stack_envs_round_trip(family, seed):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1),
+@given(st.sampled_from(OPEN_LOOP_FAMILIES), st.integers(0, 2**16 - 1),
        st.floats(0.1, 2.0))
 def test_jamming_overlay_never_raises_means(family, seed, strength):
-    """Composable onto ANY base family; multiplicative suppression can only
-    lower means (strength is clipped to [0, 1] inside the trace, so even
-    out-of-range grid values cannot amplify a channel)."""
+    """Composable onto ANY open-loop base family; multiplicative suppression
+    can only lower means (strength is clipped to [0, 1] inside the trace, so
+    even out-of-range grid values cannot amplify a channel)."""
     base = example_scenario(family, N, T)
     key = _key(seed)
     jam = JammingOverlay(base=base, horizon=T, strength=strength)
@@ -141,7 +161,7 @@ def test_scenario_grid_rows_match_serial_realize(family, seed):
 
 
 @settings(max_examples=15, deadline=None)
-@given(st.sampled_from(FAMILIES), st.integers(0, 2**16 - 1))
+@given(st.sampled_from(OPEN_LOOP_FAMILIES), st.integers(0, 2**16 - 1))
 def test_dense_means_matches_means_at(family, seed):
     env = example_scenario(family, N, T).realize(_key(seed))
     dense = dense_means(env, T)
@@ -149,3 +169,20 @@ def test_dense_means_matches_means_at(family, seed):
     for t in (0, T // 2, T - 1):
         np.testing.assert_array_equal(
             np.asarray(dense[t]), np.asarray(env.means_at(jnp.array(t))))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(REACTIVE_FAMILIES), st.integers(0, 2**16 - 1))
+def test_open_loop_helpers_raise_on_reactive(family, seed):
+    """dense_means / means_at / sample on a reactive env must fail loudly
+    with closed-loop-API guidance — env.table is the PRE-suppression base,
+    and returning it silently would report the wrong channel statistics."""
+    env = example_scenario(family, N, T).realize(_key(seed))
+    with pytest.raises(ValueError, match="interaction"):
+        dense_means(env, T)
+    with pytest.raises(ValueError, match="closed-loop"):
+        env.means_at(jnp.array(0))
+    with pytest.raises(ValueError, match="closed-loop"):
+        env.sample(jnp.array(0), _key(seed))
+    with pytest.raises(ValueError, match="reactive_jammer"):
+        JammingOverlay(base=example_scenario(family, N, T), horizon=T)
