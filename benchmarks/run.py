@@ -9,6 +9,12 @@
   fig4_fairness      cumulative AoI variance (fairness), mean±std    (Fig. 4)
   fl_batch           serial-vs-batched speedup of the vmapped FL engine
                      (simulate_fl_batch) + batch-of-1 bitwise parity
+  fl_substrate       sparse event-driven FL substrate (repro.fl.sparse) at
+                     population scale: FL rounds/sec at N=100,000 clients /
+                     M=64 slots under availability churn, plus the
+                     dense-vs-sparse bitwise parity bit at the paper's FL
+                     scale (M = N: identity selection must reproduce the
+                     dense AsyncFLTrainer exactly)
   glr_detector       per-step microbench of the GLR-CUCB detector at H=1024:
                      streaming carried-prefix state vs the legacy cumsum
                      recompute (+ the geometric split grid), restart-round
@@ -867,6 +873,134 @@ def fl_batch_bench():
 
 
 # ---------------------------------------------------------------------------
+# fl_substrate — sparse event-driven client axis at N = 1e5
+# ---------------------------------------------------------------------------
+
+def fl_substrate():
+    """The sparse FL substrate's two acceptance numbers, re-measured per run.
+
+    Throughput: ``SparseAsyncFLTrainer`` at N=100,000 clients / M=64 slots
+    (per-client state is O(1) scalars in (N,) arrays; only the M scheduled
+    clients train and hit the ``weighted_aggregate`` kernel) under Markov
+    availability churn, reported as warm FL rounds/sec — the dense runtime
+    cannot represent this N at all (O(N*P) buffers, all-N training).
+    ``--quick`` shrinks the round count but N stays at 1e5: the point of
+    the record is the population scale.
+
+    Parity: at M = N the top-M selection degenerates to the identity
+    permutation and every gather/scatter is an identity move, so the sparse
+    trainer must reproduce the dense ``AsyncFLTrainer`` BITWISE at the
+    paper's FL scale (M=20 clients, N=30 channels) — every state leaf and
+    every metric.  The bit is gated in CI."""
+    from repro.core.availability import MarkovChurn
+    from repro.core.channels import make_scenario
+    from repro.data.pipeline import client_batch_indices, gather_client_batches
+    from repro.fl import (AsyncFLConfig, AsyncFLTrainer, SparseFLConfig,
+                          SparseAsyncFLTrainer)
+    from repro.fl.sparse import _DATA_TAG
+    from repro.utils.tree import tree_flatten_concat
+
+    # --- throughput at population scale ------------------------------------
+    n, m, nch, d, nex, bsz = 100_000, 64, 16, 16, 8, 4
+    rounds = 4 if QUICK else 24
+
+    def loss_fn(p, x, y):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    rng = np.random.default_rng(0)
+    cx = jnp.asarray(rng.normal(size=(n, nex, d)).astype(np.float32))
+    cy = jnp.asarray(rng.normal(size=(n, nex)).astype(np.float32))
+    params0 = {"w": jnp.zeros((d,), jnp.float32)}
+    tr = SparseAsyncFLTrainer(
+        SparseFLConfig(n_clients=n, n_sched=m, n_channels=nch,
+                       batch_size=bsz, local_epochs=1, staleness_cap=8),
+        GLRCUCB(nch, m, history=128),
+        make_stationary(jnp.linspace(0.9, 0.3, nch)), loss_fn,
+        availability=MarkovChurn(p_drop=0.05, p_rejoin=0.5))
+    keys = jax.random.split(KEY, rounds)
+    jax.block_until_ready(tr.run(tr.init(params0, KEY), cx, cy, keys))  # warm
+    t0 = time.perf_counter()
+    st, mets = tr.run(tr.init(params0, KEY), cx, cy, keys)
+    jax.block_until_ready(st.params)
+    wall_s = time.perf_counter() - t0
+    rps = rounds / wall_s
+    finite = bool(jnp.isfinite(tree_flatten_concat(st.params)).all()
+                  and jnp.isfinite(mets["local_loss"]).all())
+    served = int(jnp.sum(st.aoi < rounds + 1))
+    row(f"fl_substrate/throughput/N={n}/M={m}", wall_s / rounds * 1e6,
+        f"rounds={rounds};rounds_per_sec={rps:.2f};finite={finite};"
+        f"clients_served={served}")
+
+    # --- dense-vs-sparse bitwise parity at the paper's FL scale -------------
+    pn, pnch, pr, pe, pb = 20, 30, 6, 2, 3
+    prng = np.random.default_rng(7)
+    pcx = jnp.asarray(prng.normal(size=(pn, 16, 8)).astype(np.float32))
+    pcy = jnp.asarray(prng.normal(size=(pn, 16)).astype(np.float32))
+
+    def ploss(p, x, y):
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    pp0 = {"w": jnp.zeros((8,), jnp.float32), "b": jnp.zeros((), jnp.float32)}
+    psched = GLRCUCB(pnch, pn, history=64)
+    proc = make_scenario("piecewise", n_channels=pnch, horizon=pr,
+                         n_breakpoints=2)
+    rk = jax.random.fold_in(KEY, 41)
+    dense = AsyncFLTrainer(
+        AsyncFLConfig(n_clients=pn, n_channels=pnch, local_epochs=pe,
+                      staleness_cap=3, max_update_norm=50.0),
+        psched, proc, ploss, realize_key=rk)
+    sparse = SparseAsyncFLTrainer(
+        SparseFLConfig(n_clients=pn, n_sched=pn, n_channels=pnch,
+                       batch_size=pb, local_epochs=pe, staleness_cap=3,
+                       max_update_norm=50.0),
+        psched, proc, ploss, realize_key=rk)
+    pkeys = jax.random.split(jax.random.fold_in(KEY, 42), pr)
+    ids = jnp.arange(pn, dtype=jnp.int32)
+    bxs, bys = [], []
+    for r_ in range(pr):   # dense side replays the sparse on-device data draw
+        kd = jax.random.fold_in(pkeys[r_], _DATA_TAG)
+        idx = client_batch_indices(kd, ids, 16, pe, pb)
+        bx_, by_ = gather_client_batches(pcx, pcy, ids, idx)
+        bxs.append(bx_)
+        bys.append(by_)
+    ds, dm = dense.run(dense.init(pp0, KEY), jnp.stack(bxs), jnp.stack(bys),
+                       pkeys)
+    ss, sm = sparse.run(sparse.init(pp0, KEY), pcx, pcy, pkeys)
+    shared = [
+        (ds.params, ss.params), (ds.buffers, ss.buffers),
+        (ds.has_update, ss.has_update), (ds.last_success, ss.last_success),
+        (ds.aoi, ss.aoi), (ds.staleness, ss.staleness),
+        (ds.contrib, ss.contrib), (ds.zeta, ss.zeta),
+        (ds.contrib_buf, ss.contrib_buf), (ds.sched_state, ss.sched_state),
+        (ds.env_state, ss.env_state),
+    ]
+    parity = all(
+        np.array_equal(np.asarray(la), np.asarray(lb))
+        for a, b in shared
+        for la, lb in zip(jax.tree_util.tree_leaves(a),
+                          jax.tree_util.tree_leaves(b))
+    ) and all(
+        np.array_equal(np.asarray(dm[k]), np.asarray(sm[k])) for k in dm)
+    row("fl_substrate/dense-vs-sparse-parity", 0.0,
+        f"M=N={pn};rounds={pr};bitwise_match={parity}")
+
+    BENCH["fl_substrate"] = {
+        "n_clients": n,
+        "n_sched": m,
+        "n_channels": nch,
+        "rounds": rounds,
+        "wall_s": round(wall_s, 3),
+        "rounds_per_sec": round(rps, 2),
+        "finite": finite,
+        "clients_served": served,
+        "availability": "markov_churn",
+        "parity_n_clients": pn,
+        "parity_rounds": pr,
+        "dense_vs_sparse_bitwise": bool(parity),
+    }
+
+
+# ---------------------------------------------------------------------------
 # chaos_suite — closed-loop adversaries + fault injection + degradation
 # ---------------------------------------------------------------------------
 
@@ -1074,7 +1208,8 @@ def main() -> None:
     figures = ((scenario_suite, scenario_suite_glr) if args.scenarios else
                (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
                 glr_detector, hp_grid, scenario_suite, scenario_suite_glr,
-                chaos_suite, fig3_fig4_fl, fl_batch_bench, kernels, roofline))
+                chaos_suite, fig3_fig4_fl, fl_batch_bench, fl_substrate,
+                kernels, roofline))
     for fig in figures:
         _figure(fig)
     # per-run compile accounting of the sweep executable cache: misses are

@@ -12,6 +12,10 @@
                  score source routed by scenario metadata
 - faults:        registry of client-side fault families (dropout, NaN
                  gradients, byte-flip scaling) for robustness studies
+- availability:  registry of client availability families (always-on,
+                 Markov churn, stragglers, dropout-rejoin) — the
+                 event-driven heterogeneity layer of the sparse FL
+                 substrate (repro.fl.sparse)
 """
-from repro.core import aoi, channels, faults, regret
+from repro.core import aoi, availability, channels, faults, regret
 from repro.core.bandits import MExp3, GLRCUCB, AoIAware, RandomScheduler, oracle_assign

@@ -47,15 +47,20 @@ def normalized_aoi(aoi: jnp.ndarray, a_max: jnp.ndarray) -> jnp.ndarray:
 
 
 def expected_aoi_from_means(mu_seq: jnp.ndarray) -> jnp.ndarray:
-    """Lemma 2: E[a_i(t)] = Σ_τ Π_{k=0..τ} (1 - μ_{s_i(t-k)}).
+    """Lemma 2: E[a_i(t)] = Σ_{τ>=0} Π_{k<τ} (1 - μ_{s_i(t-k)}).
 
     ``mu_seq``: (H,) the success means of the channels scheduled to the
     client over the last H rounds, most-recent first.  The series is
     truncated at H terms (geometric tail is negligible for H ≫ 1/μ_min).
+
+    The τ=0 term is the empty product — a leading 1, matching the paper's
+    a_i(0) = 1 convention (AoI is never below 1): at constant μ the series
+    is 1 + (1-μ)/μ·(1-(1-μ)^H) → 1/μ, agreeing with
+    ``oracle_stationary_aoi`` (Eq. 59) in the large-H limit.
     """
     one_minus = 1.0 - mu_seq
     prods = jnp.cumprod(one_minus)
-    return jnp.sum(prods)
+    return 1.0 + jnp.sum(prods)
 
 
 def oracle_stationary_aoi(mu_best: jnp.ndarray) -> jnp.ndarray:

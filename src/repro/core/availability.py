@@ -1,0 +1,264 @@
+"""``AvailabilityProcess`` — registry-driven client availability dynamics.
+
+The event-driven heterogeneity layer of the sparse FL substrate
+(``repro.fl.sparse``): a jittable per-client state machine modeling the
+imperfect-participation regime (Pase et al., Hu et al.) that the paper's
+round protocol abstracts away — availability churn, stragglers, dropouts.
+Mirrors the channel-scenario and fault registries
+(``repro.core.channels.process`` / ``repro.core.faults``): a family is a
+frozen, hashable dataclass whose scalar knobs are *traced* hyper-parameters
+(the ``TracedHyperParams`` mixin), registered under a family name, and
+stepped as a pure jittable function — so availability processes bucket,
+sweep and grid-vmap exactly like channels and faults do (stack instances
+with ``stack_params`` and vmap ``step`` over the stacked ``params`` axis).
+
+Every client is in one of three phases, with a latency counter:
+
+  IDLE (0)     schedulable: the server may grant the client a slot
+  WORKING (1)  mid-computation (straggler latency): unavailable until its
+               ``timer`` expires
+  DROPPED (2)  churned away (crash / churn): unavailable until it rejoins
+
+``init_state(n_clients)`` returns the ``{"phase", "timer"}`` pytree of
+(N,) arrays; ``step(key, t, astate, sched_mask)`` advances one round and
+returns ``(astate', available)`` where ``available`` is the (N,) f32
+{0, 1} schedulable mask for the NEXT round.  ``sched_mask`` is the (N,)
+{0, 1} mask of clients the server granted THIS round, so latency families
+react to actual scheduling (one-round observation delay — the same
+contract as the reactive channel forms).  All randomness comes from
+``key``; all knobs are read from the ``sp`` pytree inside ``_step``, never
+from ``self``.
+
+The sparse trainer folds a dedicated tag into the round key for the
+availability stream (``repro.fl.sparse._AVAIL_TAG``), so an always-on
+substrate's PRNG consumption is bitwise identical to having no
+availability process at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Dict, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams
+from repro.core.channels.process import check_knobs
+
+# client phases (int32 codes in ``state["phase"]``)
+IDLE = 0
+WORKING = 1
+DROPPED = 2
+
+
+def init_availability_state(n_clients: int) -> Dict[str, jnp.ndarray]:
+    """All clients start IDLE with no pending latency."""
+    return {
+        "phase": jnp.zeros((n_clients,), jnp.int32),
+        "timer": jnp.zeros((n_clients,), jnp.float32),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityProcess(TracedHyperParams):
+    """Base class: a hashable availability-family description.
+
+    Subclasses set ``FAMILY``/``TRACED`` and implement ``_step``:
+
+      _step(key, t, astate, sched_mask, sp)
+          the generator: ``{"phase", "timer"}`` state in,
+          ``(astate', available (N,) f32)`` out; every traced knob read
+          from ``sp``.
+      example()
+          a default instance — lets tests and benchmarks enumerate the
+          registry.
+    """
+
+    FAMILY: ClassVar[str] = ""
+
+    def _step(self, key: jax.Array, t: jnp.ndarray, astate,
+              sched_mask: jnp.ndarray, sp) -> Tuple[Any, jnp.ndarray]:
+        raise NotImplementedError
+
+    @classmethod
+    def example(cls) -> "AvailabilityProcess":
+        return cls()
+
+    def init_state(self, n_clients: int) -> Dict[str, jnp.ndarray]:
+        return init_availability_state(n_clients)
+
+    def step(self, key: jax.Array, t: jnp.ndarray, astate,
+             sched_mask: jnp.ndarray, params=None) -> Tuple[Any, jnp.ndarray]:
+        """Advance the per-client state machine one round.
+
+        ``params`` optionally overrides the traced knobs (``self.params()``
+        pytree) — the grid-vmap hook, same convention as
+        ``ChannelProcess.realize`` / ``FaultProcess.inject``.  Returns
+        ``(astate', available)`` with ``available`` the (N,) f32 {0, 1}
+        schedulable mask.
+        """
+        if params is None or not jax.tree_util.tree_leaves(params):
+            params = self.params()
+        return self._step(key, t, astate, sched_mask, params)
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.faults / repro.core.channels.process)
+# ---------------------------------------------------------------------------
+
+_AVAIL_REGISTRY: Dict[str, Type[AvailabilityProcess]] = {}
+
+
+def register_availability(cls: Type[AvailabilityProcess]) -> Type[AvailabilityProcess]:
+    """Class decorator: add an availability family to the registry."""
+    if not cls.FAMILY:
+        raise ValueError(
+            f"register_availability: {cls.__name__} has no FAMILY name")
+    if cls.FAMILY in _AVAIL_REGISTRY:
+        raise ValueError(
+            f"register_availability: duplicate family {cls.FAMILY!r}")
+    _AVAIL_REGISTRY[cls.FAMILY] = cls
+    return cls
+
+
+def registered_availabilities() -> Dict[str, Type[AvailabilityProcess]]:
+    """Name -> class for every registered availability family (a copy)."""
+    return dict(_AVAIL_REGISTRY)
+
+
+def make_availability(family: str, **kwargs) -> AvailabilityProcess:
+    """Construct an availability process by registry name.  Unknown or
+    missing knobs raise eagerly with the family's valid knob list (same
+    eager check as ``make_scenario`` / ``make_fault``)."""
+    try:
+        cls = _AVAIL_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"make_availability: unknown family {family!r}; registered: "
+            f"{sorted(_AVAIL_REGISTRY)}") from None
+    check_knobs(cls, f"make_availability({family!r})", kwargs)
+    return cls(**kwargs)
+
+
+def example_availability(family: str) -> AvailabilityProcess:
+    """The family's default example instance."""
+    try:
+        cls = _AVAIL_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"example_availability: unknown family {family!r}; registered: "
+            f"{sorted(_AVAIL_REGISTRY)}") from None
+    return cls.example()
+
+
+# ---------------------------------------------------------------------------
+# built-in families
+# ---------------------------------------------------------------------------
+
+@register_availability
+@dataclasses.dataclass(frozen=True)
+class AlwaysOn(AvailabilityProcess):
+    """Every client schedulable every round — the dense-parity reference
+    (a sparse substrate under ``always_on`` reproduces the dense runtime's
+    full-participation assumption)."""
+
+    FAMILY = "always_on"
+    TRACED = ()
+
+    def _step(self, key, t, astate, sched_mask, sp):
+        n = astate["phase"].shape[0]
+        return astate, jnp.ones((n,), jnp.float32)
+
+
+@register_availability
+@dataclasses.dataclass(frozen=True)
+class MarkovChurn(AvailabilityProcess):
+    """Two-state availability churn: an IDLE client drops with ``p_drop``
+    per round, a DROPPED one rejoins with ``p_rejoin`` — the Gilbert-
+    Elliott pattern applied to client presence instead of channel state."""
+
+    p_drop: float = 0.05
+    p_rejoin: float = 0.2
+
+    FAMILY = "markov_churn"
+    TRACED = ("p_drop", "p_rejoin")
+
+    def _step(self, key, t, astate, sched_mask, sp):
+        phase = astate["phase"]
+        n = phase.shape[0]
+        k0, k1 = jax.random.split(key)
+        drop = jax.random.bernoulli(k0, jnp.clip(sp["p_drop"], 0.0, 1.0), (n,))
+        rejoin = jax.random.bernoulli(
+            k1, jnp.clip(sp["p_rejoin"], 0.0, 1.0), (n,))
+        is_dropped = phase == DROPPED
+        new_phase = jnp.where(
+            is_dropped,
+            jnp.where(rejoin, IDLE, DROPPED),
+            jnp.where(drop, DROPPED, phase),
+        ).astype(jnp.int32)
+        avail = (new_phase != DROPPED).astype(jnp.float32)
+        return {"phase": new_phase, "timer": astate["timer"]}, avail
+
+
+@register_availability
+@dataclasses.dataclass(frozen=True)
+class StragglerLatency(AvailabilityProcess):
+    """Compute-latency stragglers: a granted client enters WORKING for a
+    per-grant latency — 1 round for fast clients, ``1 + Geometric`` with
+    mean ``slow_latency`` for the Bernoulli(``slow_frac``) slow ones — and
+    is unschedulable until its timer expires."""
+
+    slow_frac: float = 0.2
+    slow_latency: float = 4.0
+
+    FAMILY = "straggler"
+    TRACED = ("slow_frac", "slow_latency")
+
+    def _step(self, key, t, astate, sched_mask, sp):
+        phase, timer = astate["phase"], astate["timer"]
+        n = phase.shape[0]
+        k0, k1 = jax.random.split(key)
+        slow = jax.random.bernoulli(
+            k0, jnp.clip(sp["slow_frac"], 0.0, 1.0), (n,))
+        # geometric extra latency with mean (slow_latency - 1), clients
+        # drawing independently; fast grants finish within the round
+        p = 1.0 / jnp.maximum(sp["slow_latency"] - 1.0, 1.0)
+        extra = jnp.floor(
+            jnp.log1p(-jax.random.uniform(k1, (n,))) / jnp.log1p(-jnp.clip(p, 1e-6, 1.0 - 1e-6)))
+        grant_latency = jnp.where(slow, 1.0 + extra, 1.0)
+        granted = sched_mask > 0.5
+        timer = jnp.where(granted, grant_latency, jnp.maximum(timer - 1.0, 0.0))
+        working = timer > 0.5
+        new_phase = jnp.where(
+            working, WORKING, jnp.where(phase == WORKING, IDLE, phase)
+        ).astype(jnp.int32)
+        avail = (~working & (new_phase != DROPPED)).astype(jnp.float32)
+        return {"phase": new_phase, "timer": timer}, avail
+
+
+@register_availability
+@dataclasses.dataclass(frozen=True)
+class DropoutRejoin(AvailabilityProcess):
+    """Crash-and-rejoin dropouts: an IDLE client crashes with ``rate`` per
+    round and stays DROPPED for a deterministic ``rejoin_after`` rounds —
+    the bounded-outage regime (a maintenance window, not permanent churn)."""
+
+    rate: float = 0.02
+    rejoin_after: float = 10.0
+
+    FAMILY = "dropout_rejoin"
+    TRACED = ("rate", "rejoin_after")
+
+    def _step(self, key, t, astate, sched_mask, sp):
+        phase, timer = astate["phase"], astate["timer"]
+        n = phase.shape[0]
+        crash = jax.random.bernoulli(key, jnp.clip(sp["rate"], 0.0, 1.0), (n,))
+        is_dropped = phase == DROPPED
+        timer = jnp.where(is_dropped, jnp.maximum(timer - 1.0, 0.0), timer)
+        back = is_dropped & (timer <= 0.5)
+        newly = ~is_dropped & crash
+        new_phase = jnp.where(
+            newly, DROPPED, jnp.where(back, IDLE, phase)).astype(jnp.int32)
+        timer = jnp.where(newly, jnp.maximum(sp["rejoin_after"], 1.0), timer)
+        avail = (new_phase != DROPPED).astype(jnp.float32)
+        return {"phase": new_phase, "timer": timer}, avail

@@ -10,12 +10,69 @@ For multi-seed Monte-Carlo FL (``repro.sim.simulate_fl_batch``),
 stacks their draws on a leading (B,) axis — slice b is bit-identical to
 what a serial ``FederatedLoader(seed=seeds[b])`` would have produced, so
 the vmapped and serial training paths see the same data.
+
+The host-side loaders above precompute ``(R, M, ...)`` round data — fine
+at M = tens of clients, impossible at the sparse substrate's N = 1e5+.
+``client_batch_indices`` / ``gather_client_batches`` are the jittable
+replacement: the full client datasets stay device-resident as (N, n, ...)
+operands, and each round draws mini-batch *indices* only for the M
+scheduled clients, keyed by ``fold_in(key, client_id)`` — a pure function
+of (round key, client id), so the same client scheduled by any subset, at
+any slot, sees the same batches (the dense-vs-sparse parity anchor of
+``repro.fl.sparse``).
 """
 from __future__ import annotations
 
 from typing import Iterator, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+
+def client_batch_indices(
+    key: jax.Array,
+    client_ids: jnp.ndarray,       # (M,) int32 — the scheduled clients
+    n_examples: int,
+    local_epochs: int,
+    batch_size: int,
+) -> jnp.ndarray:
+    """Per-client mini-batch indices, (M, E, B) int32 in [0, n_examples).
+
+    Client ``i``'s draw depends only on ``fold_in(key, i)`` — not on which
+    other clients were scheduled or where ``i`` sits in ``client_ids`` — so
+    a sparse M-client gather and a dense all-N precomputation produce
+    bit-identical batches for every shared client.
+    """
+
+    def one(cid):
+        return jax.random.randint(
+            jax.random.fold_in(key, cid),
+            (local_epochs, batch_size), 0, n_examples)
+
+    return jax.vmap(one)(client_ids)
+
+
+def gather_client_batches(
+    client_x: jnp.ndarray,         # (N, n, ...) device-resident datasets
+    client_y: jnp.ndarray,         # (N, n)
+    client_ids: jnp.ndarray,       # (M,) int32
+    idx: jnp.ndarray,              # (M, E, B) from client_batch_indices
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather ``(x (M, E, B, ...), y (M, E, B))`` for the scheduled clients.
+
+    Only the M scheduled rows of the (N, n, ...) datasets are touched — the
+    sparse substrate's per-round data cost is O(M · E · B), independent of
+    the total client count N.
+    """
+
+    def one(xi, yi, ix):
+        return jnp.take(xi, ix, axis=0), jnp.take(yi, ix, axis=0)
+
+    return jax.vmap(one)(
+        jnp.take(client_x, client_ids, axis=0),
+        jnp.take(client_y, client_ids, axis=0),
+        idx)
 
 
 class FederatedLoader:

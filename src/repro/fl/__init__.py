@@ -1,2 +1,3 @@
 from repro.fl.client import local_sgd
 from repro.fl.round import AsyncFLConfig, AsyncFLState, AsyncFLTrainer
+from repro.fl.sparse import SparseFLConfig, SparseFLState, SparseAsyncFLTrainer

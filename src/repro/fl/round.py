@@ -34,12 +34,25 @@ One round, entirely inside jit:
 
 Client updates are carried *flattened* (M, P) — the same layout the
 contribution estimator needs, and the layout the Pallas aggregation
-kernel consumes.
+kernel consumes.  This dense runtime sizes every per-client array to
+``cfg.n_clients`` and trains ALL clients each round (Steps 1-2 iterate the
+full client set); for the sparse event-driven client axis at N = 1e5+ —
+(N,) per-client scalars, (M,) slot buffers gathered per round, an
+``AvailabilityProcess`` state machine gating who is schedulable — see
+``repro.fl.sparse``, which reproduces this runtime exactly at M = N.
+
+The channel env is a *traced operand* of every compiled entry point (not a
+closure constant): ``run``/``round`` pass ``self.env`` at call time, and
+the batched engine (``repro.sim.simulate_fl_batch``) accepts stacked
+per-case envs, so sweep buckets share one executable across trainers that
+differ only in env values or scheduler traced scalars (see
+``bucket_signature``).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -106,17 +119,67 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
     cfg: AsyncFLConfig                         # (env holds arrays -> unhashable
     scheduler: Any                 # a repro.core.bandits Scheduler   by value)
     env: Any                       # a repro.core.channels ChannelEnv, or an
-                                   # unrealized ChannelProcess (realized with
-                                   # PRNGKey(0) at construction; realize
-                                   # explicitly for per-seed scenario draws)
+                                   # unrealized ChannelProcess (realized at
+                                   # construction from ``realize_key``; see
+                                   # __post_init__ for the PRNGKey(0) fallback)
     loss_fn: Callable              # (params, x, y) -> scalar loss
     proxy_loss_fn: Optional[Callable] = None  # flat params -> scalar (Eq. 35)
     faults: Optional[Any] = None   # a repro.core.faults FaultProcess, or None
+    realize_key: Optional[jax.Array] = None   # scenario realization key —
+                                   # derive per seed (scenario_realize_key)
+                                   # so Monte-Carlo seeds draw distinct
+                                   # channel trajectories
+    scenario: Optional[ChannelProcess] = None  # set by __post_init__ when env
+                                   # was handed in unrealized; the sweep
+                                   # driver re-realizes it per case from
+                                   # scenario_realize_key(case.init_key)
 
     def __post_init__(self):
         if isinstance(self.env, ChannelProcess):
-            object.__setattr__(
-                self, "env", self.env.realize(jax.random.PRNGKey(0)))
+            object.__setattr__(self, "scenario", self.env)
+            key = self.realize_key
+            if key is None:
+                # Documented fallback: direct construction without a key
+                # realizes ONE trajectory from PRNGKey(0).  Every seed of a
+                # multi-seed simulate_fl_batch run then shares that single
+                # realized channel table — fine for a quick smoke run,
+                # wrong for Monte-Carlo error bars.  Pass realize_key=
+                # scenario_realize_key(seed_key), or hand FLSweepCases to
+                # repro.sim.sweep, which derives per-case keys exactly like
+                # the regret sweep path does.
+                warnings.warn(
+                    "AsyncFLTrainer: ChannelProcess env realized with the "
+                    "fixed PRNGKey(0) fallback — all seeds will share one "
+                    "realized channel trajectory.  Pass realize_key= for "
+                    "per-seed scenario draws (repro.sim.sweep derives "
+                    "per-case keys automatically).",
+                    stacklevel=2)
+                key = jax.random.PRNGKey(0)
+            object.__setattr__(self, "env", self.env.realize(key))
+
+    def bucket_signature(self) -> Tuple:
+        """Value-based identity for sweep bucketing and executable caching.
+
+        Two trainer *instances* with equal signatures lower to the same
+        compiled program: the structural parts (cfg, scheduler
+        ``hp_signature``, env canonical shapes, loss/proxy function
+        identity, fault instance) specialize the trace, while scheduler
+        traced scalars ride the state ``hp`` pytree and env arrays enter as
+        operands — so equal-signature trainers share one bucket and one
+        executable, with their differing values stacked on the batch axis.
+        (``AsyncFLTrainer`` itself still hashes by identity — its env holds
+        arrays — which is why this is a method, not ``__hash__``.)
+        """
+        sig = getattr(self.scheduler, "hp_signature", None)
+        sched_sig = sig() if sig is not None else self.scheduler
+        if self.scenario is not None:
+            env_sig = ("scenario",) + self.scenario.env_signature()
+        else:
+            leaves, treedef = jax.tree_util.tree_flatten(self.env)
+            env_sig = (treedef, tuple(
+                (tuple(jnp.shape(l)), str(jnp.result_type(l))) for l in leaves))
+        return ("async_fl", self.cfg, sched_sig, env_sig, self.loss_fn,
+                self.proxy_loss_fn, self.faults)
 
     # ------------------------------------------------------------------ init
     def init(self, params: Any, key: jax.Array, hp: Any = None) -> AsyncFLState:
@@ -170,9 +233,13 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         batches_x: jnp.ndarray,    # (M, E, B, ...)
         batches_y: jnp.ndarray,    # (M, E, B)
         key: jax.Array,
+        env: Any = None,           # traced ChannelEnv operand (None: self.env,
+                                   # baked as a trace constant)
     ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
         cfg = self.cfg
         m = cfg.n_clients
+        if env is None:
+            env = self.env
         k_env, k_sel = jax.random.split(key)
         t = state.t
 
@@ -208,7 +275,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             # under stochastic regimes, historical mean under "mean"-hint
             # deterministic/adversarial ones — Eq. 30 vs Eq. 31)
             scores = matcher_scores(
-                self.scheduler, state.sched_state, t, self.env)
+                self.scheduler, state.sched_state, t, env)
             assignment, matcher_state = matcher.match(
                 state.matcher_state, channels, scores, state.contrib, state.aoi)
         else:
@@ -219,10 +286,10 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         # forms; reactive envs read the carried interaction state (schedules
         # up to t-1 — one-round observation delay) and then advance it with
         # the channels the matcher actually used this round
-        ch_states = self.env.sample_dyn(t, k_env, state.env_state)
+        ch_states = env.sample_dyn(t, k_env, state.env_state)
         sched_mask = jnp.zeros((cfg.n_channels,), jnp.float32)
         sched_mask = sched_mask.at[assignment].set(1.0)
-        env_state = self.env.interact_step(state.env_state, t, sched_mask)
+        env_state = env.interact_step(state.env_state, t, sched_mask)
         success = (ch_states[assignment] > 0.5).astype(jnp.float32)
         success = success * has_update        # a client with no update yet can't help
         success = success * (1.0 - dropped)   # and a dropped one can't transmit
@@ -324,6 +391,9 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         return new_state, metrics
 
     @functools.partial(jax.jit, static_argnames=("self",))
+    def _round_jit(self, state, batches_x, batches_y, key, env):
+        return self._round_impl(state, batches_x, batches_y, key, env)
+
     def round(
         self,
         state: AsyncFLState,
@@ -331,17 +401,18 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         batches_y: jnp.ndarray,    # (M, E, B)
         key: jax.Array,
     ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
-        return self._round_impl(state, batches_x, batches_y, key)
+        return self._round_jit(state, batches_x, batches_y, key, self.env)
 
     # ------------------------------------------------------------------ run
-    def _run_impl(self, state, batches_x, batches_y, keys):
+    def _run_impl(self, state, batches_x, batches_y, keys, env=None):
         def step(st, inp):
             bx, by, k = inp
-            return self._round_impl(st, bx, by, k)
+            return self._round_impl(st, bx, by, k, env)
 
         return jax.lax.scan(step, state, (batches_x, batches_y, keys))
 
-    def _run_vmapped(self, states, batches_x, batches_y, keys):
+    def _run_vmapped(self, states, batches_x, batches_y, keys,
+                     envs=None, env_axis=None):
         """Seed-batched round scan: vmap of ``_run_impl`` over a leading axis.
 
         This is the ONE program both entry points trace: ``run`` executes it
@@ -352,25 +423,39 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         differently for (M,) vs (1, M) operands (observed: 1-ulp drift in
         the ``local_loss`` metric), so the serial path must lower the
         batched shapes too, not just the same Python code.
+
+        ``envs``/``env_axis`` feed the channel env as a traced operand:
+        ``env_axis=0`` maps stacked per-case envs over the batch (the sweep
+        bucket path — trainers differing only in env values share this one
+        program), ``None`` broadcasts a single env across the batch.
+        ``envs=None`` broadcasts ``self.env``.
         """
-        return jax.vmap(self._run_impl)(states, batches_x, batches_y, keys)
+        if envs is None:
+            envs, env_axis = self.env, None
+
+        def one(state, bx, by, ks, env):
+            return self._run_impl(state, bx, by, ks, env)
+
+        return jax.vmap(one, in_axes=(0, 0, 0, 0, env_axis))(
+            states, batches_x, batches_y, keys, envs)
 
     # Two jitted variants: the donated one reuses the carried state's buffers
     # in place (the (M, P) update matrix dominates memory), but XLA:CPU does
     # not implement donation and would warn on every compile — so `run`
     # donates only where donation exists.
     @functools.partial(jax.jit, static_argnames=("self",), donate_argnums=(1,))
-    def _run_donated(self, state, batches_x, batches_y, keys):
-        return self._run_batch1(state, batches_x, batches_y, keys)
+    def _run_donated(self, state, batches_x, batches_y, keys, env):
+        return self._run_batch1(state, batches_x, batches_y, keys, env)
 
     @functools.partial(jax.jit, static_argnames=("self",))
-    def _run_plain(self, state, batches_x, batches_y, keys):
-        return self._run_batch1(state, batches_x, batches_y, keys)
+    def _run_plain(self, state, batches_x, batches_y, keys, env):
+        return self._run_batch1(state, batches_x, batches_y, keys, env)
 
-    def _run_batch1(self, state, batches_x, batches_y, keys):
+    def _run_batch1(self, state, batches_x, batches_y, keys, env=None):
         lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
         out = self._run_vmapped(lift(state), batches_x[None], batches_y[None],
-                                keys[None])
+                                keys[None],
+                                envs=self.env if env is None else env)
         return jax.tree_util.tree_map(lambda x: x[0], out)
 
     def run(
@@ -399,4 +484,4 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             raise ValueError(
                 f"run: batches leading axis {batches_x.shape[0]} != keys {r}")
         fn = self._run_plain if jax.default_backend() == "cpu" else self._run_donated
-        return fn(state, batches_x, batches_y, keys)
+        return fn(state, batches_x, batches_y, keys, self.env)

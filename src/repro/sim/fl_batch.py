@@ -54,7 +54,40 @@ from typing import Any, Dict, Tuple
 import jax
 
 
-@partial(jax.jit, static_argnames=("trainer", "data_axis", "key_axis"))
+@partial(jax.jit,
+         static_argnames=("trainer", "data_axis", "key_axis", "env_axis"))
+def _simulate_fl_batch_jit(
+    trainer,
+    states,
+    batches_x,
+    batches_y,
+    keys: jax.Array,
+    envs,
+    data_axis: int | None = 0,
+    key_axis: int | None = 0,
+    env_axis: int | None = None,
+) -> Tuple[Any, Dict[str, jax.Array]]:
+    if data_axis == 0 and key_axis == 0:
+        # the exact program `run` executes at batch 1 — bitwise parity path
+        return trainer._run_vmapped(states, batches_x, batches_y, keys,
+                                    envs=envs, env_axis=env_axis)
+
+    def one(state, bx, by, ks, env):
+        return trainer._run_impl(state, bx, by, ks, env)
+
+    return jax.vmap(one, in_axes=(0, data_axis, data_axis, key_axis, env_axis))(
+        states, batches_x, batches_y, keys, envs
+    )
+
+
+def _fill_env(trainer, envs, env_axis):
+    # env defaults to the trainer's own realized env, broadcast across the
+    # batch; it is always a traced OPERAND of the jitted program (never a
+    # closure constant), so sweep buckets can swap in stacked per-case envs
+    # without retracing
+    return (trainer.env, None) if envs is None else (envs, env_axis)
+
+
 def simulate_fl_batch(
     trainer,
     states,
@@ -63,13 +96,15 @@ def simulate_fl_batch(
     keys: jax.Array,
     data_axis: int | None = 0,
     key_axis: int | None = 0,
+    envs=None,
+    env_axis: int | None = None,
 ) -> Tuple[Any, Dict[str, jax.Array]]:
     """Vmapped ``AsyncFLTrainer.run`` over stacked seeds.
 
     Parameters
     ----------
     trainer:    an ``AsyncFLTrainer`` (static — one compiled program per
-                trainer instance; bucket heterogeneous trainers with
+                trainer *structure*; bucket heterogeneous trainers with
                 ``repro.sim.sweep``).
     states:     a batched ``AsyncFLState`` whose leaves carry a leading
                 (B,) axis, from ``trainer.init_batch(params, init_keys)``.
@@ -80,20 +115,33 @@ def simulate_fl_batch(
                 to share the round-key sequence across the batch.
     data_axis / key_axis: 0 to map over the leading axis, None to
                 broadcast.  The state batch is always mapped.
+    envs / env_axis: stacked per-entry ``ChannelEnv``s mapped over the
+                batch (``env_axis=0`` — the sweep-bucket path: per-case
+                scenario realizations or equal-signature trainers' envs),
+                or a single env broadcast (``env_axis=None``).  ``None``
+                broadcasts ``trainer.env`` (the serial-compatible default).
 
     Returns ``(final_states, metrics)`` exactly like ``AsyncFLTrainer.run``
     with every leaf gaining a leading (B,) axis — metrics are (B, R) and
     stay device-resident; nothing syncs to the host until the caller reads
     a value.
     """
+    envs, env_axis = _fill_env(trainer, envs, env_axis)
+    return _simulate_fl_batch_jit(trainer, states, batches_x, batches_y, keys,
+                                  envs, data_axis=data_axis,
+                                  key_axis=key_axis, env_axis=env_axis)
 
-    if data_axis == 0 and key_axis == 0:
-        # the exact program `run` executes at batch 1 — bitwise parity path
-        return trainer._run_vmapped(states, batches_x, batches_y, keys)
 
-    def one(state, bx, by, ks):
-        return trainer._run_impl(state, bx, by, ks)
+def _simulate_fl_batch_lower(trainer, states, batches_x, batches_y, keys,
+                             data_axis=0, key_axis=0, envs=None,
+                             env_axis=None):
+    """AOT entry point mirroring ``simulate_fl_batch``'s env defaulting; the
+    returned Lowered compiles to an executable invoked as
+    ``compiled(states, bx, by, keys, envs)``."""
+    envs, env_axis = _fill_env(trainer, envs, env_axis)
+    return _simulate_fl_batch_jit.lower(trainer, states, batches_x, batches_y,
+                                        keys, envs, data_axis=data_axis,
+                                        key_axis=key_axis, env_axis=env_axis)
 
-    return jax.vmap(one, in_axes=(0, data_axis, data_axis, key_axis))(
-        states, batches_x, batches_y, keys
-    )
+
+simulate_fl_batch.lower = _simulate_fl_batch_lower

@@ -78,6 +78,23 @@ def unpad_batch(tree, b: int):
     return jax.tree_util.tree_map(lambda x: x[:b], tree)
 
 
+def shard_clients(tree, mesh: Optional[Mesh] = None):
+    """Place (N,)-leading per-client arrays over the 1-D "cases" mesh.
+
+    The sparse FL substrate's client axis (``repro.fl.sparse`` — (N,)
+    scalars and (N, n, ...) datasets) is embarrassingly parallel outside
+    top-k and the (M,) gathers, so a ``NamedSharding`` over the same mesh
+    the sweep driver uses lets XLA partition the O(N) element-wise work
+    across devices.  On a single device this is the identity placement —
+    results are bitwise unchanged (asserted in ``tests/test_sparse_fl.py``).
+    N must divide the device count; ``pad_batch`` the tree first if not.
+    """
+    mesh = sweep_mesh() if mesh is None else mesh
+    sharding = jax.sharding.NamedSharding(mesh, P(_AXIS))
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree)
+
+
 _FN_CACHE: dict = {}
 
 
@@ -129,6 +146,39 @@ def build_sharded(
         run,
         mesh=mesh,
         in_specs=(spec(env_axis), spec(key_axis), spec(hp_axis)),
+        out_specs=P(_AXIS),
+        check_rep=False,
+    )
+    _FN_CACHE[cache_key] = fn
+    return fn
+
+
+def build_fl_sharded(trainer, mesh: Mesh):
+    """The unjitted shard-mapped FL bucket runner
+    ``(states, bx, by, keys, envs) -> (final_states, metrics)``.
+
+    Every operand is "cases"-sharded on axis 0 (leading axes must divide the
+    mesh — see ``pad_batch``); each device runs ``trainer._run_vmapped`` —
+    the exact program the unsharded engine executes — over its slice, so a
+    1-device mesh is bitwise identical to ``simulate_fl_batch``.  Cached per
+    (trainer ``bucket_signature``, mesh): equal-signature trainers share one
+    callable and its jit cache entry.
+    """
+    sig_fn = getattr(trainer, "bucket_signature", None)
+    tr_sig = sig_fn() if sig_fn is not None else trainer
+    cache_key = ("fl_fn", tr_sig, mesh)
+    cached = _FN_CACHE.get(cache_key)
+    if cached is not None:
+        return cached
+
+    def run(states, bx, by, keys, envs):
+        return trainer._run_vmapped(states, bx, by, keys, envs=envs,
+                                    env_axis=0)
+
+    fn = shard_map(
+        run,
+        mesh=mesh,
+        in_specs=(P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS), P(_AXIS)),
         out_specs=P(_AXIS),
         check_rep=False,
     )

@@ -40,11 +40,19 @@ CI.
 
 FL cases (``FLSweepCase``) ride the same driver: a mixed case list is
 bucketed with regret cases side by side, and each FL bucket executes as one
-``simulate_fl_batch`` program (vmap over seeds).  ``AsyncFLTrainer`` hashes
-by *identity* (its env holds arrays), so FL cases share a bucket only when
-they share the same trainer instance — build one trainer per policy and
-fan the seeds out as cases.  (FL buckets always run unsharded; shard them
-by handing disjoint case lists to per-host processes.)
+``simulate_fl_batch`` program (vmap over seeds).  FL buckets merge by the
+trainer's VALUE-based ``bucket_signature()`` (cfg + scheduler
+``hp_signature`` + env canonical shapes + loss-fn identity + fault
+instance): distinct trainer instances that differ only in scheduler traced
+scalars or env values share one bucket — the scalars are stacked into the
+state ``hp`` axis and the envs stacked into the engine's env operand axis.
+Scenario-backed trainers (constructed from an unrealized
+``ChannelProcess``) are re-realized PER CASE from
+``scenario_realize_key(case.init_key)`` — the same derivation the regret
+path uses — so each Monte-Carlo seed sees its own channel trajectory
+(the trainer's own PRNGKey(0)-fallback env is never used by the sweep).
+``shard=True`` spreads FL buckets over the device mesh exactly like
+regret buckets (bitwise identical on one device).
 """
 from __future__ import annotations
 
@@ -93,11 +101,15 @@ class SweepCase:
 class FLSweepCase:
     """One (name, trainer, params, init_key, round data, round keys) FL run.
 
-    ``trainer`` is an ``AsyncFLTrainer``; cases sharing the same trainer
-    *instance* and data shapes batch into one vmapped program (one entry
-    per seed: fold the seed into ``init_key``/``round_keys`` and draw
-    ``batches_*`` from a per-seed loader).  The sweep result for an FL case
-    is ``{"state": final AsyncFLState, "metrics": {name: (R,) array}}``.
+    ``trainer`` is an ``AsyncFLTrainer``; cases whose trainers share a
+    ``bucket_signature()`` (same config / scheduler family / env structure
+    / loss fns — VALUES may differ) batch into one vmapped program, one
+    entry per case: fold the seed into ``init_key``/``round_keys`` and draw
+    ``batches_*`` from a per-seed loader.  Scenario-process trainers get a
+    per-case realization drawn from ``scenario_realize_key(init_key)`` —
+    the serial-equivalent trainer is ``AsyncFLTrainer(..., env=process,
+    realize_key=scenario_realize_key(init_key))``.  The sweep result for an
+    FL case is ``{"state": final AsyncFLState, "metrics": {name: (R,)}}``.
     """
 
     name: str
@@ -140,7 +152,12 @@ def _sched_sig(sched) -> Any:
 
 def _bucket_key(case):
     if isinstance(case, FLSweepCase):
-        return ("fl", case.trainer, _tree_sig(case.params),
+        # value-based trainer signature: equal-signature trainer INSTANCES
+        # (same structure, possibly different env values / traced scalars)
+        # merge into one bucket and one compiled program
+        sig_fn = getattr(case.trainer, "bucket_signature", None)
+        tr_sig = sig_fn() if sig_fn is not None else case.trainer
+        return ("fl", tr_sig, _tree_sig(case.params),
                 _tree_sig((case.batches_x, case.batches_y, case.round_keys)))
     # scenario processes bucket by canonical form + shapes, NOT family:
     # same-signature scenarios realize to stackable envs, so one compiled
@@ -272,32 +289,76 @@ def _run_regret_bucket(bucket, collect_curve: bool, block: bool, mesh=None):
     return unpad(out), compile_s, wall_s, cache_hit
 
 
-def _run_fl_bucket(bucket, block: bool):
+def _fl_bucket_envs(bucket):
+    """The bucket's stacked env operand: per-case scenario realizations
+    (drawn from ``scenario_realize_key(case.init_key)`` — different seeds,
+    different realized tables, matching what a serial trainer constructed
+    with ``realize_key=scenario_realize_key(init_key)`` sees) or the cases'
+    own trainer envs stacked (equal-signature trainers, possibly different
+    env values)."""
+    if bucket[0].trainer.scenario is not None:
+        return realize_processes(
+            [c.trainer.scenario for c in bucket],
+            jnp.stack([scenario_realize_key(c.init_key) for c in bucket]))
+    return stack_envs([c.trainer.env for c in bucket])
+
+
+def _run_fl_bucket(bucket, block: bool, mesh=None):
     tr = bucket[0].trainer
     params = jax.tree_util.tree_map(
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]),
         *[c.params for c in bucket])
+    # per-case scheduler traced scalars: equal-signature trainers may carry
+    # different gamma/delta/... values — they ride the state hp axis, never
+    # the representative trainer's own values
+    hparams = stack_params([c.trainer.scheduler for c in bucket])
     states = tr.init_batch(
-        params, jnp.stack([c.init_key for c in bucket]), params_axis=0)
+        params, jnp.stack([c.init_key for c in bucket]), params_axis=0,
+        hp=hparams, hp_axis=None if hparams is None else 0)
+    envs = _fl_bucket_envs(bucket)
     bx = jnp.stack([jnp.asarray(c.batches_x) for c in bucket])
     by = jnp.stack([jnp.asarray(c.batches_y) for c in bucket])
     rkeys = jnp.stack([c.round_keys for c in bucket])
+    cache_key = (_bucket_key(bucket[0]), len(bucket),
+                 jax.default_backend(), _mesh_desc(mesh))
+
+    if mesh is not None:
+        d = int(mesh.devices.size)
+        states_c, b = _shard.pad_batch(states, d)
+        envs_c = _shard.pad_batch(envs, d)[0]
+        bx_c = _shard.pad_batch(bx, d)[0]
+        by_c = _shard.pad_batch(by, d)[0]
+        rkeys_c = _shard.pad_batch(rkeys, d)[0]
+        fn = _shard.build_fl_sharded(tr, mesh)
+        do_lower = lambda: jax.jit(fn).lower(states_c, bx_c, by_c, rkeys_c,
+                                             envs_c)
+        call = lambda compiled: compiled(states_c, bx_c, by_c, rkeys_c, envs_c)
+        padded = (-b) % d != 0
+        unpad = ((lambda out: _shard.unpad_batch(out, b)) if padded
+                 else (lambda out: out))
+    else:
+        do_lower = lambda: simulate_fl_batch.lower(
+            tr, states, bx, by, rkeys, envs=envs, env_axis=0)
+        call = lambda compiled: compiled(states, bx, by, rkeys, envs)
+        unpad = lambda out: out
 
     cache_hit = False
     if block:
-        cache_key = (_bucket_key(bucket[0]), len(bucket),
-                     jax.default_backend(), None)
-        do_lower = lambda: simulate_fl_batch.lower(tr, states, bx, by, rkeys)
         compiled, compile_s, cache_hit = _compile_cached(cache_key, do_lower)
         t1 = time.perf_counter()
-        out = compiled(states, bx, by, rkeys)
+        out = call(compiled)
         jax.block_until_ready(out)
         wall_s = time.perf_counter() - t1
     else:
         t0 = time.perf_counter()
-        out = simulate_fl_batch(tr, states, bx, by, rkeys)
+        if mesh is not None:
+            out = _shard.build_fl_sharded(tr, mesh)(
+                states_c, bx_c, by_c, rkeys_c, envs_c)
+        else:
+            out = simulate_fl_batch(tr, states, bx, by, rkeys,
+                                    envs=envs, env_axis=0)
         compile_s = wall_s = time.perf_counter() - t0
-    final_states, metrics = out
+    final_states, metrics = unpad(out)
     return ({"state": final_states, "metrics": metrics},
             compile_s, wall_s, cache_hit)
 
@@ -342,12 +403,11 @@ def sweep(
     report: List[BucketReport] = []
     for bucket in group_cases(cases):
         if isinstance(bucket[0], FLSweepCase):
-            out, compile_s, wall_s, hit = _run_fl_bucket(bucket, block)
-            sharded = False
+            out, compile_s, wall_s, hit = _run_fl_bucket(bucket, block, run_mesh)
         else:
             out, compile_s, wall_s, hit = _run_regret_bucket(
                 bucket, collect_curve, block, run_mesh)
-            sharded = run_mesh is not None
+        sharded = run_mesh is not None
 
         for i, c in enumerate(bucket):
             results[c.name] = jax.tree_util.tree_map(lambda x, i=i: x[i], out)

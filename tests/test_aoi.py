@@ -57,11 +57,29 @@ def test_lemma1_geometric_aoi():
 
 
 def test_expected_aoi_from_means_matches_closed_form():
+    """Lemma 2 at constant mu must agree with Eq. 59: E[a] = 1/mu.
+
+    Regression: the tau=0 empty-product term (the leading 1) used to be
+    dropped, making the series sum to (1-mu)/mu = 1/mu - 1 — below the
+    paper's a_i(0) = 1 floor and off ``oracle_stationary_aoi`` by 1.
+    """
     mu = jnp.full((2000,), 0.25)
     got = float(expected_aoi_from_means(mu))
-    want = float(oracle_stationary_aoi(jnp.array(0.25)))  # sum_(t>=1) prod = (1-p)/p ...
-    # Lemma 2 series: sum_{tau>=0} (1-mu)^{tau+1} = (1-mu)/mu;  E[a] = 1/mu - 1
-    assert abs(got - (1 - 0.25) / 0.25) < 1e-3
+    want = float(oracle_stationary_aoi(jnp.array(0.25)))
+    assert abs(want - 4.0) < 1e-6
+    assert abs(got - want) < 1e-3, (got, want)
+
+
+def test_expected_aoi_matches_oracle_in_large_h_limit():
+    """Both closed forms pin to 1/mu on constant-mu sequences, and to each
+    other, across the mu range as H -> inf (Lemma 2 vs Eq. 59)."""
+    for mu in (0.05, 0.3, 0.5, 0.9):
+        h = int(80.0 / mu)                       # H >> 1/mu: tail negligible
+        series = float(expected_aoi_from_means(jnp.full((h,), mu)))
+        oracle = float(oracle_stationary_aoi(jnp.array(mu)))
+        assert abs(oracle - 1.0 / mu) < 1e-4, mu
+        assert abs(series - oracle) < 1e-3 * oracle, (mu, series, oracle)
+        assert series >= 1.0 - 1e-6              # a_i(0) = 1 floor
 
 
 @given(st.lists(st.floats(1.0, 50.0), min_size=2, max_size=16))
@@ -81,7 +99,7 @@ def test_normalized_aoi_in_unit_interval():
 
 
 def test_lemma2_time_varying_expected_aoi():
-    """Lemma 2: sum_tau prod_{k<=tau} (1 - mu_{s(t-k)}) equals E[AoI] - 1
+    """Lemma 2: sum_{tau>=0} prod_{k<tau} (1 - mu_{s(t-k)}) equals E[AoI]
     for a *changing* channel sequence (Eq. 8 convention: success -> AoI=1),
     validated against the direct last-success-at-lag-k expansion."""
     import numpy as np
@@ -89,4 +107,4 @@ def test_lemma2_time_varying_expected_aoi():
     analytic = float(expected_aoi_from_means(jnp.asarray(mu_seq, jnp.float32)))
     direct = sum((k + 1) * np.prod(1 - mu_seq[:k]) * mu_seq[k]
                  for k in range(300))
-    assert abs((analytic + 1.0) - direct) < 1e-3, (analytic, direct)
+    assert abs(analytic - direct) < 1e-3, (analytic, direct)

@@ -1,0 +1,180 @@
+"""``repro.core.availability`` — the client availability registry.
+
+Covers registry plumbing (enumeration, eager knob validation — mirroring
+the channel/fault registries), the per-family state-machine invariants of
+every built-in family, and the grid-vmap contract (``stack_params`` +
+``step(..., params=...)``) the sweep machinery relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.availability import (
+    DROPPED,
+    IDLE,
+    WORKING,
+    AlwaysOn,
+    AvailabilityProcess,
+    DropoutRejoin,
+    MarkovChurn,
+    StragglerLatency,
+    example_availability,
+    init_availability_state,
+    make_availability,
+    register_availability,
+    registered_availabilities,
+)
+from repro.core.bandits.base import stack_params
+
+KEY = jax.random.PRNGKey(0)
+N = 32
+
+
+# ---------------------------------------------------------------------------
+# registry plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_enumerates_builtin_families():
+    fams = registered_availabilities()
+    assert {"always_on", "markov_churn", "straggler",
+            "dropout_rejoin"} <= set(fams)
+    for name, cls in fams.items():
+        proc = example_availability(name)
+        assert isinstance(proc, cls)
+        assert isinstance(proc, AvailabilityProcess)
+
+
+def test_make_availability_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown family"):
+        make_availability("nope")
+    with pytest.raises(ValueError, match="p_drop"):
+        make_availability("markov_churn", p_drop=0.1, bogus_knob=3)
+    proc = make_availability("markov_churn", p_drop=0.1, p_rejoin=0.9)
+    assert proc.p_drop == 0.1
+
+
+def test_duplicate_family_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        register_availability(
+            type("Dup", (AlwaysOn,), {"FAMILY": "always_on"}))
+
+
+def test_unnamed_family_rejected():
+    with pytest.raises(ValueError, match="no FAMILY"):
+        register_availability(
+            type("NoName", (AvailabilityProcess,), {"FAMILY": ""}))
+
+
+# ---------------------------------------------------------------------------
+# state-machine invariants
+# ---------------------------------------------------------------------------
+
+def _run(proc, rounds, sched=None, key=KEY):
+    """Step ``rounds`` times; returns (final state, (R, N) avail history)."""
+    astate = proc.init_state(N)
+    grants = (jnp.zeros((N,), jnp.float32) if sched is None else sched)
+    hist = []
+    for t in range(rounds):
+        astate, avail = jax.jit(proc.step)(
+            jax.random.fold_in(key, t), jnp.asarray(t), astate, grants)
+        hist.append(avail)
+    return astate, jnp.stack(hist)
+
+
+@pytest.mark.parametrize("family", sorted({"always_on", "markov_churn",
+                                           "straggler", "dropout_rejoin"}))
+def test_families_produce_binary_masks_and_valid_phases(family):
+    proc = example_availability(family)
+    sched = (jnp.arange(N) < 4).astype(jnp.float32)   # grant the first 4
+    astate, hist = _run(proc, 12, sched)
+    assert bool(jnp.all((hist == 0.0) | (hist == 1.0)))
+    assert bool(jnp.all((astate["phase"] >= IDLE) & (astate["phase"] <= DROPPED)))
+    assert bool(jnp.all(astate["timer"] >= 0.0))
+
+
+def test_always_on_never_blocks():
+    _, hist = _run(AlwaysOn(), 8)
+    assert bool(jnp.all(hist == 1.0))
+
+
+def test_markov_churn_edge_rates():
+    # p_drop=0: nobody ever leaves
+    _, hist = _run(MarkovChurn(p_drop=0.0, p_rejoin=0.5), 10)
+    assert bool(jnp.all(hist == 1.0))
+    # p_drop=1, p_rejoin=1: everyone alternates DROPPED <-> IDLE
+    _, hist = _run(MarkovChurn(p_drop=1.0, p_rejoin=1.0), 4)
+    assert bool(jnp.all(hist[0] == 0.0))
+    assert bool(jnp.all(hist[1] == 1.0))
+    assert bool(jnp.all(hist[2] == 0.0))
+
+
+def test_straggler_granted_clients_go_working_then_return():
+    # slow_frac=1, mean latency 3: every granted client must be unavailable
+    # right after its grant, and IDLE clients that were never granted stay
+    # available
+    proc = StragglerLatency(slow_frac=1.0, slow_latency=3.0)
+    grants = (jnp.arange(N) < 8).astype(jnp.float32)
+    astate = proc.init_state(N)
+    astate, avail = proc.step(KEY, jnp.asarray(0), astate, grants)
+    assert bool(jnp.all(avail[:8] == 0.0))
+    assert bool(jnp.all(astate["phase"][:8] == WORKING))
+    assert bool(jnp.all(avail[8:] == 1.0))
+    # with no further grants every straggler's timer eventually expires
+    for t in range(1, 40):
+        astate, avail = proc.step(
+            jax.random.fold_in(KEY, t), jnp.asarray(t), astate,
+            jnp.zeros((N,), jnp.float32))
+    assert bool(jnp.all(avail == 1.0))
+    assert bool(jnp.all(astate["phase"] == IDLE))
+
+
+def test_dropout_rejoin_deterministic_outage_length():
+    proc = DropoutRejoin(rate=1.0, rejoin_after=3.0)
+    astate = proc.init_state(N)
+    # t=0: everyone crashes (rate 1) for exactly 3 rounds
+    astate, avail = proc.step(KEY, jnp.asarray(0), astate, jnp.zeros((N,)))
+    assert bool(jnp.all(avail == 0.0))
+    assert bool(jnp.all(astate["phase"] == DROPPED))
+    outage = 0
+    for t in range(1, 10):
+        astate, avail = proc.step(
+            jax.random.fold_in(KEY, t), jnp.asarray(t), astate,
+            jnp.zeros((N,)))
+        if bool(jnp.all(avail == 0.0)):
+            outage += 1
+        else:
+            break
+    assert outage == 2        # rounds 1-2 still out, back at round 3
+
+
+def test_init_state_shapes():
+    st = init_availability_state(7)
+    assert st["phase"].shape == (7,) and st["phase"].dtype == jnp.int32
+    assert st["timer"].shape == (7,)
+
+
+# ---------------------------------------------------------------------------
+# grid vmap: traced knobs ride the params pytree
+# ---------------------------------------------------------------------------
+
+def test_knob_grid_vmaps_over_stacked_params():
+    grid = [MarkovChurn(p_drop=0.0, p_rejoin=0.5),
+            MarkovChurn(p_drop=1.0, p_rejoin=1.0)]
+    hp = stack_params(grid)
+    rep = grid[0]
+    astates = jax.vmap(lambda _: rep.init_state(N))(jnp.arange(2))
+
+    def step_one(sp, astate):
+        return rep.step(KEY, jnp.asarray(0), astate,
+                        jnp.zeros((N,), jnp.float32), params=sp)
+
+    _, avail = jax.jit(jax.vmap(step_one))(hp, astates)
+    # entry 0: p_drop=0 keeps everyone; entry 1: p_drop=1 drops everyone —
+    # same compiled program, knob values from the stacked pytree
+    assert bool(jnp.all(avail[0] == 1.0))
+    assert bool(jnp.all(avail[1] == 0.0))
+    # vmapped result slice matches the serial per-instance step bitwise
+    _, serial = grid[1].step(KEY, jnp.asarray(0),
+                             rep.init_state(N), jnp.zeros((N,), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(avail[1]), np.asarray(serial))

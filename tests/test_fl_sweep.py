@@ -1,0 +1,220 @@
+"""FL sweep correctness: per-case scenario realization + value bucketing.
+
+The two fixes this suite pins:
+
+* **Scenario realization keys.**  ``FLSweepCase`` scenario trainers draw
+  their realized channel tables from ``scenario_realize_key(init_key)`` —
+  per case, like the regret sweep — instead of every seed sharing the
+  trainer's one ``PRNGKey(0)``-realized table.  Direct trainer
+  construction without ``realize_key`` keeps the fallback but warns.
+
+* **Value-based bucketing.**  Trainers bucket by ``bucket_signature()``
+  (config + scheduler ``hp_signature`` + env structure + loss identity),
+  not instance identity, so separately-constructed equal trainers — and
+  trainers differing only in traced scheduler scalars or env values —
+  share one compiled program; sharded FL buckets run through the same
+  ``shard_map`` path the regret buckets use.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB
+from repro.core.channels import make_scenario, make_stationary, scenario_realize_key
+from repro.data import BatchedFederatedLoader, make_federated_classification
+from repro.fl import AsyncFLConfig, AsyncFLTrainer, SparseAsyncFLTrainer, SparseFLConfig
+from repro.sim.sweep import FLSweepCase, group_cases, sweep
+
+KEY = jax.random.PRNGKey(0)
+M, NCH, R = 4, 6, 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cx, cy, *_ = make_federated_classification(
+        M, samples_per_client=32, dim=8, alpha=0.3)
+    k1, _ = jax.random.split(KEY)
+    params = {"w": jax.random.normal(k1, (8, 4)) * 0.2, "b": jnp.zeros(4)}
+
+    def loss(p, x, y):
+        lg = jax.nn.log_softmax(x @ p["w"] + p["b"])
+        return -jnp.mean(jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), 1))
+
+    def batches(seed, r=R):
+        bl = BatchedFederatedLoader(cx, cy, batch_size=4, local_epochs=1,
+                                    seeds=[seed])
+        bx, by = bl.next_rounds(r)
+        return jnp.asarray(bx[0]), jnp.asarray(by[0])
+
+    return params, loss, batches
+
+
+def _cfg():
+    return AsyncFLConfig(n_clients=M, n_channels=NCH, local_epochs=1,
+                         client_lr=0.1, server_lr=0.1)
+
+
+def _scenario():
+    return make_scenario("piecewise", n_channels=NCH, horizon=R,
+                         n_breakpoints=2)
+
+
+def _round_keys(tag):
+    return jnp.stack([jax.random.fold_in(KEY, 100 * tag + t) for t in range(R)])
+
+
+def _case(name, tr, params, seed, batches):
+    bx, by = batches(seed)
+    return FLSweepCase(name=name, trainer=tr, params=params,
+                      init_key=jax.random.fold_in(KEY, seed),
+                      batches_x=bx, batches_y=by, round_keys=_round_keys(seed))
+
+
+# ---------------------------------------------------------------------------
+# scenario realization (satellite: per-case keys, documented fallback)
+# ---------------------------------------------------------------------------
+
+def test_process_env_without_realize_key_warns(setup):
+    params, loss, _ = setup
+    with pytest.warns(UserWarning, match="PRNGKey\\(0\\) fallback"):
+        AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), _scenario(), loss)
+    with pytest.warns(UserWarning, match="PRNGKey\\(0\\) fallback"):
+        SparseAsyncFLTrainer(
+            SparseFLConfig(n_clients=M, n_sched=M, n_channels=NCH,
+                           batch_size=4),
+            GLRCUCB(NCH, M, history=32), _scenario(), loss)
+
+
+def test_process_env_with_realize_key_does_not_warn(setup):
+    import warnings
+
+    params, loss, _ = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), _scenario(), loss,
+                       realize_key=KEY)
+
+
+def test_fl_sweep_cases_draw_distinct_scenario_realizations(setup):
+    """Two FL sweep cases of one scenario trainer with different init keys
+    must see different realized channel tables (before the fix, every case
+    shared the trainer's single construction-time realization)."""
+    params, loss, batches = setup
+    tr = AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), _scenario(),
+                        loss, realize_key=KEY)
+    # identical data and round keys: ONLY the init key (realization + init)
+    # differs between the cases
+    bx, by = batches(0)
+    cases = [
+        FLSweepCase(name=f"s{i}", trainer=tr, params=params,
+                   init_key=jax.random.fold_in(KEY, i),
+                   batches_x=bx, batches_y=by, round_keys=_round_keys(0))
+        for i in (1, 2)
+    ]
+    assert len(group_cases(cases)) == 1
+    results, _ = sweep(cases, block=False)
+    m1 = np.asarray(results["s1"]["metrics"]["n_success"])
+    m2 = np.asarray(results["s2"]["metrics"]["n_success"])
+    # different realized channel tables -> different success trajectories
+    assert not np.array_equal(m1, m2)
+
+
+def test_fl_sweep_scenario_serial_matches_sweep(setup):
+    """A 1-case scenario bucket reproduces the serial trainer constructed
+    with ``realize_key=scenario_realize_key(init_key)`` bitwise."""
+    params, loss, batches = setup
+    init_key = jax.random.fold_in(KEY, 5)
+    sched = GLRCUCB(NCH, M, history=32)
+    tr_sweep = AsyncFLTrainer(_cfg(), sched, _scenario(), loss,
+                              realize_key=KEY)   # value irrelevant for cases
+    case = FLSweepCase(name="solo", trainer=tr_sweep, params=params,
+                      init_key=init_key, batches_x=batches(3)[0],
+                      batches_y=batches(3)[1], round_keys=_round_keys(3))
+    results, _ = sweep([case], block=False)
+
+    tr_serial = AsyncFLTrainer(_cfg(), sched, _scenario(), loss,
+                               realize_key=scenario_realize_key(init_key))
+    st, mets = tr_serial.run(tr_serial.init(params, init_key),
+                             batches(3)[0], batches(3)[1], _round_keys(3))
+    for a, b in zip(jax.tree_util.tree_leaves(st),
+                    jax.tree_util.tree_leaves(results["solo"]["state"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for k in mets:
+        np.testing.assert_array_equal(
+            np.asarray(mets[k]), np.asarray(results["solo"]["metrics"][k]))
+
+
+# ---------------------------------------------------------------------------
+# value-based bucketing (satellite: bucket_signature)
+# ---------------------------------------------------------------------------
+
+def test_equal_valued_trainer_instances_share_one_bucket(setup):
+    params, loss, batches = setup
+    env = make_stationary(jnp.linspace(0.9, 0.2, NCH))
+    mk = lambda: AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), env, loss)
+    cases = [_case(f"tw{i}", mk(), params, i, batches) for i in (0, 1)]
+    assert [len(b) for b in group_cases(cases)] == [2]
+
+    results, report = sweep(cases, block=False)
+    assert report[0].batch == 2
+    # each case matches its own serial run (engine-level multi-seed parity
+    # tolerance: the batch-2 program may fuse reductions differently)
+    for i, c in enumerate(cases):
+        tr = c.trainer
+        st, mets = tr.run(tr.init(params, c.init_key), c.batches_x,
+                          c.batches_y, c.round_keys)
+        got = results[c.name]["metrics"]
+        for k in mets:
+            np.testing.assert_allclose(np.asarray(mets[k]),
+                                       np.asarray(got[k]), rtol=1e-6, atol=1e-7)
+
+
+def test_traced_scalar_grid_shares_bucket_with_correct_per_case_values(setup):
+    """Trainers differing only in a traced scheduler scalar (gamma) merge
+    into one bucket, and each case trains with ITS OWN value — not the
+    representative trainer's."""
+    params, loss, batches = setup
+    env = make_stationary(jnp.linspace(0.9, 0.2, NCH))
+    mk = lambda g: AsyncFLTrainer(
+        _cfg(), GLRCUCB(NCH, M, gamma=g, history=32), env, loss)
+    cases = [_case(f"g{g}", mk(g), params, 0, batches) for g in (0.5, 2.0)]
+    assert [len(b) for b in group_cases(cases)] == [2]
+
+    results, _ = sweep(cases, block=False)
+    for c in cases:
+        tr = c.trainer
+        st, mets = tr.run(tr.init(params, c.init_key), c.batches_x,
+                          c.batches_y, c.round_keys)
+        got = results[c.name]["metrics"]
+        for k in mets:
+            np.testing.assert_allclose(np.asarray(mets[k]),
+                                       np.asarray(got[k]), rtol=1e-6, atol=1e-7)
+
+
+def test_structurally_different_trainers_stay_separate(setup):
+    params, loss, batches = setup
+    env = make_stationary(jnp.linspace(0.9, 0.2, NCH))
+    a = AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), env, loss)
+    b = AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=64), env, loss)
+    cases = [_case("ha", a, params, 0, batches),
+             _case("hb", b, params, 0, batches)]
+    assert [len(bk) for bk in group_cases(cases)] == [1, 1]
+
+
+def test_sharded_fl_sweep_bitwise_identical_to_unsharded(setup):
+    """``sweep(shard=True)`` routes FL buckets through the shard_map path;
+    on the host's mesh the results must be bitwise identical to the
+    unsharded sweep (single-device identity, the test_shard guarantee)."""
+    params, loss, batches = setup
+    env = make_stationary(jnp.linspace(0.9, 0.2, NCH))
+    mk = lambda: AsyncFLTrainer(_cfg(), GLRCUCB(NCH, M, history=32), env, loss)
+    cases = [_case(f"sh{i}", mk(), params, i, batches) for i in (0, 1)]
+
+    plain, _ = sweep(cases, block=False)
+    sharded, report = sweep(cases, block=False, shard=True)
+    assert all(r.sharded for r in report)
+    for name in plain:
+        for a, b in zip(jax.tree_util.tree_leaves(plain[name]),
+                        jax.tree_util.tree_leaves(sharded[name])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
