@@ -39,6 +39,12 @@
                      regret must differ), and the FL degradation bits —
                      quarantined trainer finite under 20% NaN corruption
                      while the unguarded baseline diverges
+  serve_suite        multi-tenant scheduler-as-a-service (repro.sim.serve):
+                     256 concurrent tenants from ONE compiled step — p50/p99
+                     decision latency + decisions/sec under Poisson arrivals
+                     with tenant churn (leave/re-join, zero recompiles) vs a
+                     per-tenant serial-dispatch baseline, plus the
+                     single-tenant serve == offline-simulator parity bit
   kernels            Pallas kernel wall-time vs jnp oracle (interpret mode)
   roofline           dry-run roofline table (reads experiments/dryrun/*.json)
 
@@ -122,7 +128,10 @@ from repro.core.regret import (
     sublinearity_index,
 )
 from repro.sim import (
+    SchedServer,
+    ServeRequest,
     SweepCase,
+    offline_round_stream,
     simulate_aoi_regret_batch,
     simulate_fl_batch,
     sweep,
@@ -1135,6 +1144,106 @@ def chaos_suite():
 
 
 # ---------------------------------------------------------------------------
+# serve_suite — multi-tenant scheduler-as-a-service (repro.sim.serve)
+# ---------------------------------------------------------------------------
+
+def serve_suite():
+    """256 concurrent tenants answered from ONE compiled step: p50/p99
+    decision latency and decisions/sec under Poisson arrivals with tenant
+    churn, vs a per-tenant serial-dispatch baseline (slot batch of 1),
+    plus the single-tenant serve == offline-simulator bitwise-parity bit.
+
+    Churn (leave + re-join with fresh hyper-parameters) re-enters the
+    cached admit executable — ``compiles_churn_episode`` counts the sweep
+    executable-cache misses across the whole Poisson episode and is gated
+    at <= 2 in CI."""
+    from repro.launch.sched_serve import poisson_episode, saturated_throughput
+
+    C, B = 256, 64                       # tenant capacity, requests per step
+    t_par = 150 if QUICK else 1000       # parity-replay rounds
+    n_req = C * (2 if QUICK else 12)     # Poisson episode length
+    n_serial = B * (2 if QUICK else 8)   # serial-baseline request count
+    n, m, h = 16, 4, 256
+    sched = GLRCUCB(n, m, history=h, detector_stride=5, split_grid="auto")
+
+    m0 = sweep_cache_stats()["misses"]
+    server = SchedServer(sched, capacity=C, slots=B)
+    serial = SchedServer(sched, capacity=C, slots=1)   # serial dispatch
+    compiles_warmup = sweep_cache_stats()["misses"] - m0
+
+    # -- single-tenant parity: serve == offline simulator, bitwise ---------
+    env = random_piecewise_env(KEY, n, t_par, 3)
+    off = simulate_aoi_regret(sched, env, KEY, t_par, collect_curve=False,
+                              return_state=True)
+    rkeys, rstates = offline_round_stream(env, KEY, t_par)
+    rkeys = np.asarray(rkeys)
+    rstates = np.asarray(rstates, np.float32)
+    server.join("parity", key=KEY)
+    for t in range(t_par):
+        server.serve([ServeRequest("parity", rstates[t], rkeys[t])])
+    prow = server.tenant_state("parity")
+    parity = all(
+        bool(jnp.array_equal(a, b))
+        for a, b in zip(jax.tree_util.tree_leaves(off["final_sched_state"]),
+                        jax.tree_util.tree_leaves(prow.sched_state))
+    ) and bool(jnp.array_equal(off["aoi_pi"], prow.aoi))
+    server.leave("parity")
+
+    # -- tenant pool: per-tenant keys + traced-hp overrides ----------------
+    tenant_ids = [f"job-{i}" for i in range(C)]
+    for i, tid in enumerate(tenant_ids):
+        server.join(tid, key=jax.random.fold_in(KEY, i),
+                    hp={"gamma": 0.8 + 0.4 * i / C})
+        serial.join(tid, key=jax.random.fold_in(KEY, i))
+    rounds = 32
+    means = jax.random.uniform(KEY, (C, n), minval=0.15, maxval=0.9)
+    states = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(KEY, 1), means[None], (rounds, C, n)), np.float32)
+    keys = np.asarray(jax.random.split(jax.random.fold_in(KEY, 2),
+                                       max(n_req, n_serial)))
+
+    # -- saturated throughput: batched step vs serial dispatch -------------
+    rate = saturated_throughput(server, tenant_ids, states, keys, n_req)
+    serial_rate = saturated_throughput(serial, tenant_ids, states, keys,
+                                       n_serial)
+    speedup = rate / serial_rate
+
+    # -- Poisson episode at 80% of saturation, with churn ------------------
+    m1 = sweep_cache_stats()["misses"]
+    lam = 0.8 * rate
+    arrivals = np.cumsum(
+        np.random.default_rng(0).exponential(1.0 / lam, size=n_req))
+    lat, wall, churn_events = poisson_episode(
+        server, tenant_ids, states, keys, arrivals, churn_stride=8)
+    compiles_churn = sweep_cache_stats()["misses"] - m1
+    p50, p99 = (float(x) for x in np.percentile(lat, [50, 99]))
+
+    row("serve/saturated-batched", 1e6 / rate,
+        f"decisions_per_sec={rate:.0f};tenants={C};slot_batch={B}")
+    row("serve/saturated-serial", 1e6 / serial_rate,
+        f"decisions_per_sec={serial_rate:.0f};speedup={speedup:.1f}")
+    row("serve/poisson", wall / n_req * 1e6,
+        f"p50_ms={p50 * 1e3:.2f};p99_ms={p99 * 1e3:.2f};"
+        f"churn_events={churn_events};compiles={compiles_churn}")
+    row("serve/parity", 0.0, f"single_tenant_parity={parity}")
+    BENCH["serve_suite"] = {
+        "tenants": C,
+        "slot_batch": B,
+        "decisions_per_sec": round(rate, 1),
+        "serial_decisions_per_sec": round(serial_rate, 1),
+        "speedup_vs_serial": round(speedup, 2),
+        "p50_ms": round(p50 * 1e3, 3),
+        "p99_ms": round(p99 * 1e3, 3),
+        "poisson_decisions_per_sec": round(n_req / wall, 1),
+        "offered_load_frac": 0.8,
+        "churn_events": churn_events,
+        "compiles_warmup": compiles_warmup,
+        "compiles_churn_episode": compiles_churn,
+        "single_tenant_parity": bool(parity),
+    }
+
+
+# ---------------------------------------------------------------------------
 # kernels (interpret mode on CPU — relative numbers only)
 # ---------------------------------------------------------------------------
 
@@ -1209,7 +1318,7 @@ def main() -> None:
                (fig2a_regret, fig2b_breakpoints, fig2c_scale, batch1_parity,
                 glr_detector, hp_grid, scenario_suite, scenario_suite_glr,
                 chaos_suite, fig3_fig4_fl, fl_batch_bench, fl_substrate,
-                kernels, roofline))
+                serve_suite, kernels, roofline))
     for fig in figures:
         _figure(fig)
     # per-run compile accounting of the sweep executable cache: misses are

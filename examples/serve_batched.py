@@ -57,6 +57,9 @@ def main():
     for _ in range(args.tokens):
         tok, cache = serve(params, cache, tok)
         generated.append(tok)
+    # dispatches are async: block on the last step's outputs before reading
+    # the clock, or the reported tok/s counts un-retired work
+    jax.block_until_ready((tok, cache))
     dt = time.time() - t0
     gen = jnp.stack(generated, axis=1)
     print(f"generated {args.tokens} tokens x {args.batch} seqs in {dt:.2f}s "

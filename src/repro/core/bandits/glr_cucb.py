@@ -24,8 +24,10 @@ inside every ``lax.scan`` step.  Two implementations share the statistic:
   and no raw-sample history at all.  Detection rounds dispatch through
   ``repro.kernels.ops.glr_step`` (fused prefix append + test: Pallas
   kernel on TPU, jnp oracle on CPU); the
-  ``split_grid`` field picks the dense reference grid (``"all"``) or the
-  O(log H) geometric subgrid (``"geometric"``).
+  ``split_grid`` field picks the dense reference grid (``"all"``), the
+  O(log H) geometric subgrid (``"geometric"``), or ``"auto"`` — dense for
+  windows up to ``auto_split_h``, geometric above (resolved structurally
+  at trace time; see ``resolved_split_grid``).
 * ``detector_impl="recompute"`` is the legacy reference path: a rolled
   chronological history buffer whose prefix sum is recomputed with an O(H)
   ``cumsum`` per detection round via ``repro.kernels.ops.glr_scan``.
@@ -120,8 +122,14 @@ class GLRCUCB(TracedHyperParams):
     detector_impl: str = "streaming"  # "streaming" carried prefix state |
                                       # "recompute" legacy per-round cumsum
     split_grid: str = "all"      # GLR split points: "all" dense reference |
-                                 # "geometric" O(log H) power-of-two grid
-                                 # (streaming impl only)
+                                 # "geometric" O(log H) power-of-two grid |
+                                 # "auto" — dense up to auto_split_h, then
+                                 # geometric (streaming impl only)
+    auto_split_h: int = 4096     # "auto" switch point: history > this uses
+                                 # the geometric grid (the dense O(H) test
+                                 # dominates step cost at large windows; the
+                                 # subgrid trades a bounded detection delay
+                                 # for an ~H/log H cheaper statistic)
     name: str = "glr-cucb"
 
     # traced: numerics-only knobs.  alpha stays structural (it sizes the
@@ -141,15 +149,30 @@ class GLRCUCB(TracedHyperParams):
             raise ValueError(
                 f"GLRCUCB: unknown detector_impl {self.detector_impl!r}; "
                 "use 'streaming' or 'recompute'")
-        if self.split_grid not in ("all", "geometric"):
+        if self.split_grid not in ("all", "geometric", "auto"):
             raise ValueError(
                 f"GLRCUCB: unknown split_grid {self.split_grid!r}; "
-                "use 'all' or 'geometric'")
+                "use 'all', 'geometric' or 'auto'")
         if self.detector_impl == "recompute" and self.split_grid != "all":
             raise ValueError(
-                "GLRCUCB: split_grid='geometric' needs the streaming "
+                "GLRCUCB: split_grid='geometric'/'auto' needs the streaming "
                 "detector (the recompute path always evaluates the dense "
                 "grid)")
+        if self.auto_split_h < 1:
+            raise ValueError(
+                f"GLRCUCB: auto_split_h must be >= 1, got {self.auto_split_h}")
+
+    def resolved_split_grid(self) -> str:
+        """The concrete split grid the detector evaluates ("all" or
+        "geometric").  ``split_grid="auto"`` resolves at trace time from the
+        structural window size: dense while ``history <= auto_split_h``
+        (small windows — the dense test is cheap and detection-delay-free),
+        geometric above it.  The boundary window ``history == auto_split_h``
+        stays dense, so a config at the switch point is bitwise-equal to an
+        explicit ``split_grid="all"``."""
+        if self.split_grid != "auto":
+            return self.split_grid
+        return "geometric" if self.history > self.auto_split_h else "all"
 
     def _fused(self) -> bool:
         """Whether streaming detection rounds run the fused ``ops.glr_step``
@@ -297,7 +320,7 @@ class GLRCUCB(TracedHyperParams):
             def detect(_):
                 return ops.glr_step(
                     state.cum, state.total, state.base, d_prev,
-                    r_vec, sched, split_grid=self.split_grid,
+                    r_vec, sched, split_grid=self.resolved_split_grid(),
                     backend=backend)
 
             def append_only(_):
@@ -315,7 +338,7 @@ class GLRCUCB(TracedHyperParams):
             def detect(_):
                 return ops.ref.glr_stream_stat(
                     cum[channels], total[channels], base[channels],
-                    counts[channels], self.split_grid)
+                    counts[channels], self.resolved_split_grid())
 
             stats_m = jax.lax.cond(
                 stride_ok, detect, lambda _: jnp.full((m,), -jnp.inf), None)

@@ -20,6 +20,26 @@ from repro.core.bandits.oracle import oracle_assign
 from repro.core.channels import ChannelEnv, ChannelProcess, scenario_realize_key
 
 
+def policy_round(scheduler, sched_state, aoi, t, k_sel, ch_states):
+    """One policy-side scheduling round: select -> observe -> update -> AoI.
+
+    ``ch_states`` is the (N,) realized channel-state vector for round ``t``;
+    the observed rewards are the scheduled entries (semi-bandit feedback).
+    Returns ``(sched_state, aoi, channels, rewards)``.
+
+    This is the single source of truth for the per-round policy transition:
+    the offline simulator's scan body AND the multi-tenant serving loop
+    (``repro.sim.serve``) both call it, so a single-tenant serve episode is
+    bitwise-equal to ``simulate_aoi_regret`` on the same reward stream by
+    construction, not by parallel maintenance of two copies.
+    """
+    channels, aux = scheduler.select(sched_state, t, k_sel, aoi)
+    rewards = ch_states[channels]
+    sched_state = scheduler.update(sched_state, t, channels, rewards, aux)
+    aoi = update_aoi(aoi, rewards > 0.5)
+    return sched_state, aoi, channels, rewards
+
+
 class SimCarry(NamedTuple):
     sched_state: Any
     aoi_pi: jnp.ndarray
@@ -39,6 +59,7 @@ def simulate_aoi_regret_impl(
     horizon: int,
     collect_curve: bool = True,
     hp=None,
+    return_state: bool = False,
 ) -> Dict[str, jnp.ndarray]:
     """Unjitted simulation core (one scheduler/env/key triple).
 
@@ -61,10 +82,8 @@ def simulate_aoi_regret_impl(
         # (which reflects schedules up to t-1 — one-round observation delay)
         states = env.sample_dyn(t, k_env, carry.env_state)
 
-        channels, aux = scheduler.select(carry.sched_state, t, k_sel, carry.aoi_pi)
-        rewards = states[channels]
-        sched_state = scheduler.update(carry.sched_state, t, channels, rewards, aux)
-        aoi_pi = update_aoi(carry.aoi_pi, rewards > 0.5)
+        sched_state, aoi_pi, channels, rewards = policy_round(
+            scheduler, carry.sched_state, carry.aoi_pi, t, k_sel, states)
         # the environment reacts to what the POLICY used; the oracle is the
         # clairvoyant counterfactual on the same realized channel states
         sched_mask = jnp.zeros((env.n_channels,), jnp.float32).at[channels].set(1.0)
@@ -115,12 +134,20 @@ def simulate_aoi_regret_impl(
     # stays fixed per scheduler family — buckets are per-policy anyway.
     if hasattr(carry.sched_state, "restarts"):
         out["restarts"] = carry.sched_state.restarts
+    # the full final policy state — the serve parity tests compare every
+    # leaf of it against the serving loop's tenant row (static flag, so the
+    # default result-dict structure is unchanged everywhere else)
+    if return_state:
+        out["final_sched_state"] = carry.sched_state
     return out
 
 
-@partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve"))
-def _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve=True):
-    return simulate_aoi_regret_impl(scheduler, env, key, horizon, collect_curve)
+@partial(jax.jit, static_argnames=("scheduler", "horizon", "collect_curve",
+                                   "return_state"))
+def _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve=True,
+                             return_state=False):
+    return simulate_aoi_regret_impl(scheduler, env, key, horizon,
+                                    collect_curve, return_state=return_state)
 
 
 def simulate_aoi_regret(
@@ -129,6 +156,7 @@ def simulate_aoi_regret(
     key: jax.Array,
     horizon: int,
     collect_curve: bool = True,
+    return_state: bool = False,
 ) -> Dict[str, jnp.ndarray]:
     """Simulate ``scheduler`` vs the oracle for ``horizon`` rounds.
 
@@ -146,10 +174,15 @@ def simulate_aoi_regret(
       aoi_pi/star:  final per-client AoI
       cum_aoi_var:  (T,) cumulative AoI variance of the policy (Fig. 4 metric)
       success_rate: overall fraction of successful transmissions
+
+    ``return_state=True`` additionally returns ``final_sched_state`` — the
+    complete policy state after round T (the serve parity tests compare it
+    leaf-for-leaf against the serving loop's tenant slot).
     """
     if isinstance(env, ChannelProcess):
         env = env.realize(scenario_realize_key(key))
-    return _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve)
+    return _simulate_aoi_regret_jit(scheduler, env, key, horizon, collect_curve,
+                                    return_state=return_state)
 
 
 def regret_growth_exponent(regret_curve: jnp.ndarray, burn_in: int = 100) -> float:

@@ -28,8 +28,20 @@ into VMEM, runs the append + evaluation on the VPU, and writes the updated
 tiles back — one kernel per detector invocation instead of a write kernel
 + cumsum + statistic chain.
 
+Tenant axis: the multi-tenant serving loop (``repro.sim.serve``) carries
+one detector state per tenant — (G, N, H) prefix rings.  ``glr_step_tenants``
+runs the same per-channel math with tenants as the grid's LEADING axis
+(grid ``(G, ceil(N/8))``): every (tenant, channel-block) pair is one grid
+step over the identical (8, H) tile program, so G tenants' detection
+rounds are one kernel launch.  ``vmappable_glr_step`` wires this in as the
+``jax.custom_batching.custom_vmap`` rule of the single-tenant entry —
+``vmap``-ing the fused step (what the serving loop's tenant axis does)
+lowers to the native tenant-grid kernel instead of Pallas' generic
+batching.
+
 Semantics of record: ``repro.kernels.ref.glr_step`` (tests sweep shapes,
-ring wraparound and both split grids against it).
+ring wraparound and both split grids against it; the tenant entry must
+match the single-tenant kernel row-for-row).
 """
 from __future__ import annotations
 
@@ -48,17 +60,14 @@ def _is_pow2(x):
     return (x > 0) & (jnp.bitwise_and(x, x - 1) == 0)
 
 
-def _glr_step_kernel(cum_ref, total_ref, base_ref, counts_ref,
-                     r_ref, sched_ref,
-                     cum_out, total_out, base_out, stat_out,
-                     *, h: int, geometric: bool):
-    cum = cum_ref[...].astype(jnp.float32)            # (Cb, Hp)
-    total = total_ref[...]                            # (Cb, 1)
-    base = base_ref[...]                              # (Cb, 1)
-    cnt = counts_ref[...]                             # (Cb, 1) int32
-    r = r_ref[...]                                    # (Cb, 1)
-    sch = sched_ref[...] > 0                          # (Cb, 1) bool
+def _glr_step_math(cum, total, base, cnt, r, sch, *, h: int, geometric: bool):
+    """The fused append + GLR evaluation on one (Cb, Hp) tile.
 
+    Shared verbatim by the single-tenant kernel (one grid axis over channel
+    blocks) and the tenant-grid kernel (tenants x channel blocks): a tenant
+    is just another tile of channels, so the math never sees the axis.
+    Returns ``(cum2, total2, base2, stat)``.
+    """
     j = jax.lax.broadcasted_iota(jnp.int32, (1, cum.shape[-1]), 1)
 
     # --- append: prefix-ring write -----------------------------------------
@@ -87,12 +96,47 @@ def _glr_step_kernel(cum_ref, total_ref, base_ref, counts_ref,
     valid = (s >= 1) & (s <= n - 1) & (j < h)         # pad lanes masked out
     if geometric:
         valid &= _is_pow2(s) | _is_pow2(n - s)
+    stat_sup = jnp.max(jnp.where(valid, stat, -jnp.inf),
+                       axis=-1, keepdims=True)
+    return cum2, total2, base2, stat_sup
 
+
+def _glr_step_kernel(cum_ref, total_ref, base_ref, counts_ref,
+                     r_ref, sched_ref,
+                     cum_out, total_out, base_out, stat_out,
+                     *, h: int, geometric: bool):
+    cum2, total2, base2, stat = _glr_step_math(
+        cum_ref[...].astype(jnp.float32),             # (Cb, Hp)
+        total_ref[...],                               # (Cb, 1)
+        base_ref[...],                                # (Cb, 1)
+        counts_ref[...],                              # (Cb, 1) int32
+        r_ref[...],                                   # (Cb, 1)
+        sched_ref[...] > 0,                           # (Cb, 1) bool
+        h=h, geometric=geometric)
     cum_out[...] = cum2
     total_out[...] = total2
     base_out[...] = base2
-    stat_out[...] = jnp.max(jnp.where(valid, stat, -jnp.inf),
-                            axis=-1, keepdims=True)
+    stat_out[...] = stat
+
+
+def _glr_step_kernel_tenants(cum_ref, total_ref, base_ref, counts_ref,
+                             r_ref, sched_ref,
+                             cum_out, total_out, base_out, stat_out,
+                             *, h: int, geometric: bool):
+    # blocks are (1, Cb, Hp) / (1, Cb, 1) — one tenant's channel tile; drop
+    # the unit tenant dim, run the identical tile math, restore it on store
+    cum2, total2, base2, stat = _glr_step_math(
+        cum_ref[...].astype(jnp.float32)[0],
+        total_ref[...][0],
+        base_ref[...][0],
+        counts_ref[...][0],
+        r_ref[...][0],
+        sched_ref[...][0] > 0,
+        h=h, geometric=geometric)
+    cum_out[...] = cum2[None]
+    total_out[...] = total2[None]
+    base_out[...] = base2[None]
+    stat_out[...] = stat[None]
 
 
 @functools.partial(jax.jit, static_argnames=("split_grid", "interpret"))
@@ -133,3 +177,78 @@ def glr_step(cum, total, base, counts, r_vec, sched,
     cum2, total2, base2, stats = outs
     return (cum2[:n_chan, :h], total2[:n_chan, 0],
             base2[:n_chan, 0], stats[:n_chan, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("split_grid", "interpret"))
+def glr_step_tenants(cum, total, base, counts, r_vec, sched,
+                     split_grid: str = "all", interpret: bool = False):
+    """Fused prefix append + GLR test over a tenant axis.
+
+    cum (G, N, H); total/base/counts/r_vec/sched (G, N).  Tenants are the
+    grid's leading axis — grid ``(G, ceil(N/8))`` over the same (8, H)
+    tile program as the single-tenant kernel — so one launch serves every
+    tenant's detection round.  Returns ``(cum, total, base, stats)`` with
+    the tenant axis preserved.
+    """
+    g, n_chan, h = cum.shape
+    cb = CHANNEL_BLOCK
+    n_pad = (-n_chan) % cb
+    h_pad = (-h) % 128
+    cum_p = jnp.pad(cum.astype(jnp.float32),
+                    ((0, 0), (0, n_pad), (0, h_pad)))
+    col = lambda x, dt: jnp.pad(x.astype(dt),
+                                ((0, 0), (0, n_pad)))[:, :, None]
+    total_p = col(total, jnp.float32)
+    base_p = col(base, jnp.float32)
+    counts_p = col(counts, jnp.int32)
+    r_p = col(r_vec, jnp.float32)
+    sched_p = col(sched, jnp.int32)
+    np_, hp = n_chan + n_pad, h + h_pad
+
+    wide = pl.BlockSpec((1, cb, hp), lambda t, i: (t, i, 0))
+    narrow = pl.BlockSpec((1, cb, 1), lambda t, i: (t, i, 0))
+    outs = pl.pallas_call(
+        functools.partial(_glr_step_kernel_tenants, h=h,
+                          geometric=(split_grid == "geometric")),
+        grid=(g, np_ // cb),
+        in_specs=[wide, narrow, narrow, narrow, narrow, narrow],
+        out_specs=[wide, narrow, narrow, narrow],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, np_, hp), jnp.float32),
+            jax.ShapeDtypeStruct((g, np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, np_, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cum_p, total_p, base_p, counts_p, r_p, sched_p)
+    cum2, total2, base2, stats = outs
+    return (cum2[:, :n_chan, :h], total2[:, :n_chan, 0],
+            base2[:, :n_chan, 0], stats[:, :n_chan, 0])
+
+
+@functools.lru_cache(maxsize=None)
+def vmappable_glr_step(split_grid: str, interpret: bool):
+    """The single-tenant fused step with a tenant-aware batching rule.
+
+    ``vmap`` over the returned function — the serving loop's tenant axis,
+    or any per-tenant batch of detector states — lowers to ONE
+    ``glr_step_tenants`` launch (tenants on the leading grid axis) instead
+    of Pallas' generic per-element batching.  Unbatched operands are
+    broadcast along the tenant axis first.
+    """
+
+    @jax.custom_batching.custom_vmap
+    def step(cum, total, base, counts, r_vec, sched):
+        return glr_step(cum, total, base, counts, r_vec, sched,
+                        split_grid=split_grid, interpret=interpret)
+
+    @step.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        args = tuple(
+            a if b else jnp.broadcast_to(a, (axis_size,) + a.shape)
+            for a, b in zip(args, in_batched))
+        outs = glr_step_tenants(*args, split_grid=split_grid,
+                                interpret=interpret)
+        return outs, (True, True, True, True)
+
+    return step

@@ -87,6 +87,13 @@ def glr_step(cum, total, base, counts, r_vec, sched,
                          geometric grid gathers its O(log H) splits there;
                          the Pallas kernel masks the same set densely — the
                          split sets coincide, so the sup agrees)
+
+    Inputs may carry a leading tenant axis — ``cum (G, N, H)``, everything
+    else ``(G, N)`` — in which case every backend evaluates all G tenants'
+    steps at once (the Pallas paths as ONE ``glr_step_tenants`` launch with
+    tenants on the leading grid axis).  The 2-D Pallas paths go through
+    ``vmappable_glr_step``, whose ``custom_vmap`` rule lowers an outer
+    ``vmap`` (the serving loop's tenant axis) to that same tenant kernel.
     """
     if split_grid not in _GLR_SPLIT_GRIDS:
         raise ValueError(
@@ -94,15 +101,22 @@ def glr_step(cum, total, base, counts, r_vec, sched,
             f"use one of {_GLR_SPLIT_GRIDS}")
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    tenants = jnp.ndim(cum) == 3
     if backend == "jnp":
+        if tenants:
+            return jax.vmap(
+                functools.partial(ref.glr_step, split_grid=split_grid)
+            )(cum, total, base, counts, r_vec, sched)
         return ref.glr_step(cum, total, base, counts, r_vec, sched,
                             split_grid=split_grid)
-    if backend == "pallas":
-        return _gs.glr_step(cum, total, base, counts, r_vec, sched,
-                            split_grid=split_grid, interpret=_interpret())
-    if backend == "pallas_interpret":
-        return _gs.glr_step(cum, total, base, counts, r_vec, sched,
-                            split_grid=split_grid, interpret=True)
+    if backend in ("pallas", "pallas_interpret"):
+        interpret = True if backend == "pallas_interpret" else _interpret()
+        if tenants:
+            return _gs.glr_step_tenants(cum, total, base, counts, r_vec,
+                                        sched, split_grid=split_grid,
+                                        interpret=interpret)
+        return _gs.vmappable_glr_step(split_grid, interpret)(
+            cum, total, base, counts, r_vec, sched)
     raise ValueError(
         f"glr_step: unknown backend {backend!r}; use one of {_GLR_BACKENDS}")
 

@@ -1,0 +1,156 @@
+"""Scheduler-as-a-service launcher: serve channel-scheduling decisions.
+
+Stands up a multi-tenant ``SchedServer`` (one compiled step for the whole
+tenant pool — see ``repro.sim.serve``), joins ``--tenants`` concurrent FL
+jobs, then replays Poisson request traffic with periodic tenant churn and
+reports p50/p99 decision latency and decisions/sec.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.sched_serve --tenants 256 --slots 64
+  PYTHONPATH=src python -m repro.launch.sched_serve --tenants 64 --requests 512
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bandits import GLRCUCB
+from repro.sim import SchedServer, ServeRequest
+
+
+def poisson_episode(server, tenant_ids, states, keys, arrivals,
+                    churn_stride: int = 0, churn_hp=None):
+    """Replay Poisson request traffic through ``server``; returns
+    ``(latencies_s, wall_s, churn_events)``.
+
+    Request j targets ``tenant_ids[j % len(tenant_ids)]`` with reward
+    vector ``states[(j // len(tenant_ids)) % states.shape[0], j % len(...)]``
+    and round key ``keys[j]``; it becomes eligible at ``arrivals[j]``
+    seconds after the clock starts.  Every ``churn_stride`` steps one
+    tenant is evicted and immediately re-admitted with fresh state (the
+    leave+join pair re-enters the server's cached admit executable — zero
+    compiles).  The throughput clock blocks on the final state update
+    (``jax.block_until_ready``) before it is read: un-retired async work
+    must not count as served.
+    """
+    n_req = len(arrivals)
+    n_ten = len(tenant_ids)
+    lat = np.empty(n_req)
+    queue: deque = deque()
+    nxt = 0
+    served = 0
+    steps = 0
+    churn_events = 0
+    churn_ptr = 0
+    t0 = time.perf_counter()
+    while served < n_req:
+        now = time.perf_counter() - t0
+        while nxt < n_req and arrivals[nxt] <= now:
+            queue.append(nxt)
+            nxt += 1
+        if not queue:
+            time.sleep(min(max(arrivals[nxt] - now, 0.0), 1e-3))
+            continue
+        ids = [queue.popleft()
+               for _ in range(min(server.slots, len(queue)))]
+        reqs = [ServeRequest(tenant_ids[j % n_ten],
+                             states[(j // n_ten) % states.shape[0], j % n_ten],
+                             keys[j]) for j in ids]
+        server.serve(reqs)
+        done = time.perf_counter() - t0
+        for j in ids:
+            lat[j] = done - arrivals[j]
+        served += len(ids)
+        steps += 1
+        if churn_stride and steps % churn_stride == 0:
+            tid = tenant_ids[churn_ptr % n_ten]
+            churn_ptr += 1
+            server.leave(tid)
+            server.join(tid, hp=churn_hp)
+            churn_events += 1
+    jax.block_until_ready(server._state)   # retire the last async state update
+    wall = time.perf_counter() - t0
+    return lat, wall, churn_events
+
+
+def saturated_throughput(server, tenant_ids, states, keys, n_req: int):
+    """Max decisions/sec: dispatch back-to-back full batches, block before
+    reading the clock."""
+    n_ten = len(tenant_ids)
+    t0 = time.perf_counter()
+    for start in range(0, n_req, server.slots):
+        ids = range(start, min(start + server.slots, n_req))
+        server.serve([ServeRequest(tenant_ids[j % n_ten],
+                                   states[(j // n_ten) % states.shape[0],
+                                          j % n_ten],
+                                   keys[j]) for j in ids])
+    jax.block_until_ready(server._state)
+    return n_req / (time.perf_counter() - t0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=64,
+                    help="requests batched per serving step")
+    ap.add_argument("--channels", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--history", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="episode length (default: 8 rounds per tenant)")
+    ap.add_argument("--load", type=float, default=0.8,
+                    help="offered Poisson load as a fraction of saturated "
+                         "throughput")
+    ap.add_argument("--churn-stride", type=int, default=16,
+                    help="evict+readmit one tenant every this many steps "
+                         "(0 = no churn)")
+    args = ap.parse_args()
+
+    sched = GLRCUCB(args.channels, args.clients, history=args.history,
+                    detector_stride=5, split_grid="auto")
+    server = SchedServer(sched, capacity=args.tenants, slots=args.slots)
+    print(f"[sched-serve] {sched.name}: N={args.channels} M={args.clients} "
+          f"H={args.history}; capacity={args.tenants} slot_batch={args.slots} "
+          f"({server.compiles} compiles, {server.compile_s:.1f}s)")
+
+    key = jax.random.PRNGKey(0)
+    tenant_ids = [f"job-{i}" for i in range(args.tenants)]
+    for i, tid in enumerate(tenant_ids):
+        server.join(tid, key=jax.random.fold_in(key, i),
+                    hp={"gamma": 0.8 + 0.4 * i / args.tenants})
+    print(f"[sched-serve] joined {len(server.tenants)} tenants "
+          f"(compiles still {server.stats()['compiles']})")
+
+    n_req = args.requests or args.tenants * 8
+    rounds = 32
+    means = jax.random.uniform(key, (args.tenants, args.channels),
+                               minval=0.15, maxval=0.9)
+    states = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(key, 1), means[None],
+        (rounds, args.tenants, args.channels)), np.float32)
+    keys = np.asarray(jax.random.split(jax.random.fold_in(key, 2), n_req))
+
+    warm = min(n_req, 4 * args.slots)
+    rate = saturated_throughput(server, tenant_ids, states, keys, warm)
+    lam = args.load * rate
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=n_req))
+
+    lat, wall, churn = poisson_episode(
+        server, tenant_ids, states, keys, arrivals,
+        churn_stride=args.churn_stride)
+    p50, p99 = np.percentile(lat, [50, 99]) * 1e3
+    print(f"[sched-serve] saturated {rate:.0f} decisions/s; Poisson load "
+          f"{args.load:.0%} ({lam:.0f} req/s): served {n_req} requests in "
+          f"{wall:.2f}s ({n_req / wall:.0f} decisions/s), latency "
+          f"p50={p50:.2f}ms p99={p99:.2f}ms, churn_events={churn}, "
+          f"compiles={server.stats()['compiles']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,6 +39,9 @@ def main():
     t0 = time.time()
     for _ in range(args.tokens):
         tok, cache = serve(params, cache, tok)
+    # the loop only dispatches async work; retire it before reading the
+    # clock or tok/s includes un-executed steps
+    jax.block_until_ready((tok, cache))
     dt = time.time() - t0
     print(f"[serve] {cfg.name}: {args.tokens} tokens x {args.batch} seqs "
           f"in {dt:.2f}s ({args.batch*args.tokens/dt:.1f} tok/s), "

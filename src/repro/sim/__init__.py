@@ -16,8 +16,18 @@ Public API:
   group_cases                bucket partitioning (exposed for tests)
   sweep_cache_stats /        executable-cache hit/miss counters
   clear_sweep_cache
+  cached_compile             the process-level AOT executable cache (shared
+                             by the sweep buckets and the serving loop)
   sharded_aoi_regret_batch   shard_map'd engine over a 1-D device mesh
   sweep_mesh                 1-D mesh over local devices
+  SchedServer / ServeRequest multi-tenant scheduler-as-a-service: one
+                             compiled step answers (tenant, rewards) ->
+                             schedule for a whole pool of concurrent FL
+                             jobs; churn-free join/leave (see serve.py)
+  make_serve_step /          the functional serving core (batched step,
+  make_admit / init_slots    slot admission, slot-state init)
+  offline_round_stream       the (keys, states) stream for bitwise parity
+                             with simulate_aoi_regret
 """
 from repro.sim.engine import simulate_aoi_regret_batch
 from repro.sim.fl_batch import simulate_fl_batch
@@ -31,10 +41,20 @@ from repro.sim.sweep import (
     BucketReport,
     FLSweepCase,
     SweepCase,
+    cached_compile,
     clear_sweep_cache,
     group_cases,
     sweep,
     sweep_cache_stats,
+)
+from repro.sim.serve import (
+    SchedServer,
+    ServeRequest,
+    TenantSlots,
+    init_slots,
+    make_admit,
+    make_serve_step,
+    offline_round_stream,
 )
 
 __all__ = [
@@ -47,8 +67,16 @@ __all__ = [
     "sweep",
     "sweep_cache_stats",
     "clear_sweep_cache",
+    "cached_compile",
     "sharded_aoi_regret_batch",
     "sweep_mesh",
     "pad_batch",
     "unpad_batch",
+    "SchedServer",
+    "ServeRequest",
+    "TenantSlots",
+    "init_slots",
+    "make_admit",
+    "make_serve_step",
+    "offline_round_stream",
 ]

@@ -1,0 +1,427 @@
+"""Multi-tenant scheduler-as-a-service: ONE compiled step for every job.
+
+The paper's scheduler is the per-round decision loop of a single federated
+job.  This module serves it as a shared online service: many concurrent FL
+deployments (tenants) each submit ``(tenant_id, reward_vector) ->
+schedule`` requests, and every batch of requests — whichever tenants they
+belong to — executes as one fixed-shape XLA program over device-resident
+per-tenant state.
+
+Tenant-axis state contract
+--------------------------
+``TenantSlots`` stacks, per slot, the complete per-job decision state:
+
+* the policy state pytree (for GLR-CUCB that includes the streaming
+  detector's carried prefix rings ``cum``/``total``/``base`` — PR 5 made
+  this O(N) per tenant, which is what lets thousands of tenants' full
+  scheduler state live on device),
+* the Sec.-V matcher normalizers (``MatcherState``),
+* per-client AoI, the tenant's round clock ``t``, a membership flag, and
+  decision/success counters.
+
+Every leaf has leading shape ``(capacity + 1, ...)``: row ``capacity`` is a
+scratch slot that absorbs padding writes (see below) and is never read.
+
+Request batching / padding rules
+--------------------------------
+Requests are batched into a fixed number of ``slots`` per step (the step's
+shape NEVER changes, so one executable serves any traffic mix):
+
+* short batches are padded with rows targeting the scratch slot, mask off;
+* a masked row computes the full per-request math but merges to the OLD
+  gathered values, so its scatter write is a bitwise no-op on live state —
+  and duplicate scatter indices (every pad row hits the scratch slot) all
+  carry identical values, keeping the write order-independent;
+* at most one LIVE request per tenant per batch (``SchedServer`` defers
+  duplicates to the next step), so live scatter indices never collide.
+
+Unlike ``sim/shard.py``'s pad-by-cycling (where duplicate rows recompute
+real *read-only* simulations), serve steps WRITE per-tenant state — cycling
+would double-update a tenant — hence the scratch-row scheme.
+
+Churn without recompiles
+------------------------
+``join``/``leave`` run one shared ``admit`` program that overwrites a
+single slot with a freshly initialized tenant row: the membership flag and
+the traced hyper-parameter pytree are *inputs*, so joining, leaving and
+re-joining with different gamma/delta all re-enter the same executable.
+Both the step and admit programs are AOT-compiled through the sweep
+driver's process-level executable cache (``repro.sim.sweep.cached_compile``)
+— a churn episode of any length costs exactly the two warmup compiles and
+``sweep_cache_stats()`` misses stay flat afterwards.
+
+Parity with the offline simulator
+---------------------------------
+The per-request transition calls ``repro.core.regret.policy_round`` — the
+exact function the offline ``simulate_aoi_regret`` scan body runs — so a
+single tenant served one request per round on the stream
+``offline_round_stream(env, key, T)`` reproduces the offline simulation
+*bitwise* (state, AoI and restart counts; asserted in
+``tests/test_serve.py`` and gated in CI via the ``serve_suite`` benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aoi import init_aoi, update_aoi
+from repro.core.bandits.base import init_with_hp
+from repro.core.matching import AdaptiveMatcher, MatcherState
+from repro.core.regret import policy_round
+from repro.sim.sweep import _sched_sig, cached_compile
+
+
+class TenantSlots(NamedTuple):
+    """Device-resident state for ``capacity`` tenants + one scratch row.
+
+    Every leaf's leading axis is ``capacity + 1``; row ``capacity`` is the
+    scratch slot padding writes land on (never read, never live).
+    """
+
+    sched_state: Any          # policy state pytree, leaves (C+1, ...) —
+                              # includes the streaming-GLR prefix rings
+    matcher_state: MatcherState   # Sec.-V normalizers, leaves (C+1,)
+    aoi: jnp.ndarray          # (C+1, M) per-client AoI
+    t: jnp.ndarray            # (C+1,) int32 per-tenant round clock
+    active: jnp.ndarray       # (C+1,) bool membership mask
+    decisions: jnp.ndarray    # (C+1,) int32 requests served
+    successes: jnp.ndarray    # (C+1,) f32 cumulative successful transmissions
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeRequest:
+    """One tenant's per-round decision request.
+
+    ``rewards`` is the tenant's realized (N,) channel-state vector for this
+    round (the scheduled entries become the policy's semi-bandit feedback);
+    ``key`` is the tenant's round key — for bitwise parity with the offline
+    simulator, feed the keys ``offline_round_stream`` derives.  ``contrib``
+    (optional, (M,)) carries the FL job's per-client marginal contributions
+    for the Sec.-V matcher; defaults to uniform.
+    """
+
+    tenant: Any
+    rewards: Any
+    key: Any
+    contrib: Any = None
+
+
+def init_slots(scheduler, capacity: int, matcher_beta: float = 0.5) -> TenantSlots:
+    """Fresh all-inactive slot state (``capacity + 1`` rows, see TenantSlots)."""
+    matcher = AdaptiveMatcher(matcher_beta)
+
+    def row(key):
+        return TenantSlots(
+            sched_state=scheduler.init(key),
+            matcher_state=matcher.init(),
+            aoi=init_aoi(scheduler.n_clients),
+            t=jnp.zeros((), jnp.int32),
+            active=jnp.zeros((), bool),
+            decisions=jnp.zeros((), jnp.int32),
+            successes=jnp.zeros((), jnp.float32),
+        )
+
+    # slot contents are placeholders until `admit` overwrites them (slots
+    # start inactive); a fixed fan-out key keeps the initial state reproducible
+    return jax.vmap(row)(jax.random.split(jax.random.PRNGKey(0), capacity + 1))
+
+
+def make_serve_step(scheduler, use_matching: bool = False,
+                    matcher_beta: float = 0.5):
+    """Build the batched serving step ``(state, slots, rewards, keys,
+    contrib, mask) -> (state, assignment)``.
+
+    ``slots (B,) int32`` maps each request row to its tenant slot (pad rows
+    target the scratch slot); ``rewards (B, N)``; ``keys (B, 2) uint32``
+    round keys; ``contrib (B, M)``; ``mask (B,) bool`` marks real rows.
+    Returns the updated state and the per-request ``(B, M)`` channel
+    assignment (pad/inactive rows: all -1).
+
+    The per-request transition is ``repro.core.regret.policy_round`` — the
+    offline scan body's own code — optionally composed with the Sec.-V
+    matcher (ranked by the policy's UCB ``channel_scores``, the stochastic-
+    regime routing; serve requests carry no scenario metadata).
+    """
+    matcher = AdaptiveMatcher(matcher_beta)
+
+    def one(row: TenantSlots, r_vec, key, contrib):
+        # the request key is the tenant's round key; the env half of the
+        # split belongs to whoever realized r_vec (offline_round_stream
+        # mirrors the offline simulator's derivation exactly)
+        _, k_sel = jax.random.split(key)
+        if use_matching:
+            channels, aux = scheduler.select(row.sched_state, row.t, k_sel,
+                                             row.aoi)
+            scores = scheduler.channel_scores(row.sched_state, row.t)
+            assignment, mstate = matcher.match(
+                row.matcher_state, channels, scores, contrib, row.aoi)
+            rewards = r_vec[assignment]
+            sstate = scheduler.update(row.sched_state, row.t, assignment,
+                                      rewards, aux)
+            aoi = update_aoi(row.aoi, rewards > 0.5)
+        else:
+            sstate, aoi, assignment, rewards = policy_round(
+                scheduler, row.sched_state, row.aoi, row.t, k_sel, r_vec)
+            mstate = row.matcher_state
+        new_row = TenantSlots(
+            sched_state=sstate,
+            matcher_state=mstate,
+            aoi=aoi,
+            t=row.t + 1,
+            active=row.active,
+            decisions=row.decisions + 1,
+            successes=row.successes + jnp.sum(rewards),
+        )
+        return new_row, assignment
+
+    def serve_step(state: TenantSlots, slots, rewards, keys, contrib, mask):
+        sub = jax.tree_util.tree_map(lambda x: x[slots], state)
+        live = mask & sub.active
+        new_rows, assignment = jax.vmap(one)(sub, rewards, keys, contrib)
+
+        def merge(new, old):
+            m = live.reshape(live.shape + (1,) * (new.ndim - 1))
+            return jnp.where(m, new, old)
+
+        # dead rows (pad / inactive / masked) merge back to their gathered
+        # values, so their scatter is a bitwise no-op — and every pad row's
+        # duplicate write to the scratch slot carries identical values,
+        # keeping the scatter order-independent
+        merged = jax.tree_util.tree_map(merge, new_rows, sub)
+        out = jax.tree_util.tree_map(
+            lambda s, v: s.at[slots].set(v), state, merged)
+        assignment = jnp.where(live[:, None], assignment, -1)
+        return out, assignment
+
+    return serve_step
+
+
+def make_admit(scheduler, matcher_beta: float = 0.5):
+    """Build the join/leave program ``(state, slot, key, hp, active) ->
+    state``: overwrite one slot with a freshly initialized tenant row.
+
+    ``hp`` is the scheduler's traced hyper-parameter pytree (per-tenant
+    gamma/delta/... ride here) and ``active`` a traced bool — join
+    (``True``) and leave (``False``) are the SAME executable, so tenant
+    churn never compiles.
+    """
+    matcher = AdaptiveMatcher(matcher_beta)
+
+    def admit(state: TenantSlots, slot, key, hp, active):
+        fresh = TenantSlots(
+            sched_state=init_with_hp(scheduler, key, hp),
+            matcher_state=matcher.init(),
+            aoi=init_aoi(scheduler.n_clients),
+            t=jnp.zeros((), jnp.int32),
+            active=jnp.asarray(active, bool),
+            decisions=jnp.zeros((), jnp.int32),
+            successes=jnp.zeros((), jnp.float32),
+        )
+        return jax.tree_util.tree_map(
+            lambda s, v: s.at[slot].set(v), state, fresh)
+
+    return admit
+
+
+def offline_round_stream(env, key, horizon: int):
+    """The ``(keys, states)`` stream the offline simulator consumes.
+
+    ``keys[t]`` is the round key ``simulate_aoi_regret(sched, env, key, T)``
+    feeds its step, and ``states[t]`` the (N,) channel realization it draws
+    from the env half of that key — so replaying this stream through the
+    serving loop one request per round reproduces the offline simulation
+    bitwise.  Open-loop canonical envs only (the serving loop has no
+    closed-loop feedback channel).
+    """
+    keys = jax.random.split(jax.random.fold_in(key, 1), horizon)
+
+    def row(t, k):
+        k_env, _ = jax.random.split(k)
+        return env.sample(t, k_env)
+
+    states = jax.vmap(row)(jnp.arange(horizon), keys)
+    return keys, states
+
+
+class SchedServer:
+    """Online scheduling service over a fixed-capacity tenant pool.
+
+    Exactly two programs are compiled per (policy family, capacity, slots)
+    configuration — the batched serve step and the admit program — both AOT
+    through the sweep driver's process-level executable cache, so a second
+    server with the same shape (or any amount of tenant churn) compiles
+    nothing.  The step's tenant-state operand is donated: per-step state
+    updates are in-place on accelerators.
+
+    ``serve(requests)`` batches requests into fixed-size steps (padding
+    short batches with scratch-slot rows, deferring same-tenant duplicates
+    to the next step) and returns each request's (M,) channel assignment in
+    request order.
+    """
+
+    def __init__(self, scheduler, capacity: int = 256, slots: int = 16,
+                 use_matching: bool = False, matcher_beta: float = 0.5,
+                 donate: bool = True):
+        if capacity < 1:
+            raise ValueError(f"SchedServer: capacity must be >= 1, got {capacity}")
+        if slots < 1:
+            raise ValueError(f"SchedServer: slots must be >= 1, got {slots}")
+        self.scheduler = scheduler
+        self.capacity = capacity
+        self.slots = slots
+        self.use_matching = use_matching
+        self.matcher_beta = matcher_beta
+        self._state = init_slots(scheduler, capacity, matcher_beta)
+        self._tenants: Dict[Any, int] = {}
+        self._free = list(range(capacity))[::-1]      # pop() yields slot 0 first
+        self._hp_defaults = dict(getattr(scheduler, "params", dict)())
+        self._served = 0
+        self._steps = 0
+
+        sig = _sched_sig(scheduler)
+        backend = jax.default_backend()
+        n, m = scheduler.n_channels, scheduler.n_clients
+        donate_idx = (0,) if donate else ()
+        step_fn = make_serve_step(scheduler, use_matching=use_matching,
+                                  matcher_beta=matcher_beta)
+        step_ex = (self._state,
+                   jnp.zeros((slots,), jnp.int32),
+                   jnp.zeros((slots, n), jnp.float32),
+                   jnp.zeros((slots, 2), jnp.uint32),
+                   jnp.ones((slots, m), jnp.float32),
+                   jnp.zeros((slots,), bool))
+        self._step, step_compile_s, step_hit = cached_compile(
+            ("serve_step", sig, capacity, slots, use_matching,
+             float(matcher_beta), bool(donate), backend),
+            lambda: jax.jit(step_fn, donate_argnums=donate_idx).lower(*step_ex))
+
+        admit_fn = make_admit(scheduler, matcher_beta=matcher_beta)
+        admit_ex = (self._state, jnp.zeros((), jnp.int32),
+                    jnp.zeros((2,), jnp.uint32),
+                    {k: jnp.asarray(v, jnp.float32)
+                     for k, v in self._hp_defaults.items()},
+                    jnp.zeros((), bool))
+        self._admit, admit_compile_s, admit_hit = cached_compile(
+            ("serve_admit", sig, capacity, float(matcher_beta),
+             tuple(sorted(self._hp_defaults)), bool(donate), backend),
+            lambda: jax.jit(admit_fn, donate_argnums=donate_idx).lower(*admit_ex))
+        self.compile_s = step_compile_s + admit_compile_s
+        self.compiles = int(not step_hit) + int(not admit_hit)
+
+    # -------------------------------------------------------------- tenants
+    def join(self, tenant, key=None, hp: Optional[Dict[str, Any]] = None) -> int:
+        """Admit ``tenant`` into a free slot (fresh policy/matcher/AoI state).
+
+        ``hp`` overrides traced hyper-parameters for this tenant (e.g.
+        per-job gamma/delta); unknown names raise.  Returns the slot index.
+        """
+        if tenant in self._tenants:
+            raise ValueError(f"SchedServer.join: tenant {tenant!r} already live")
+        if not self._free:
+            raise RuntimeError(
+                f"SchedServer.join: at capacity ({self.capacity} tenants)")
+        overrides = dict(hp or {})
+        unknown = set(overrides) - set(self._hp_defaults)
+        if unknown:
+            raise ValueError(
+                f"SchedServer.join: unknown hyper-parameters {sorted(unknown)} "
+                f"(traced: {sorted(self._hp_defaults)})")
+        merged = {k: jnp.asarray(overrides.get(k, v), jnp.float32)
+                  for k, v in self._hp_defaults.items()}
+        if key is None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(0), len(self._tenants) + 1)
+        slot = self._free.pop()
+        self._state = self._admit(
+            self._state, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(key, jnp.uint32), merged, jnp.asarray(True))
+        self._tenants[tenant] = slot
+        return slot
+
+    def leave(self, tenant) -> None:
+        """Evict ``tenant``: clear its slot's state and free the slot (the
+        same admit executable as ``join``, membership flag False)."""
+        slot = self._tenants.pop(tenant, None)
+        if slot is None:
+            raise KeyError(f"SchedServer.leave: unknown tenant {tenant!r}")
+        self._state = self._admit(
+            self._state, jnp.asarray(slot, jnp.int32),
+            jnp.zeros((2,), jnp.uint32),
+            {k: jnp.asarray(v, jnp.float32)
+             for k, v in self._hp_defaults.items()},
+            jnp.asarray(False))
+        self._free.append(slot)
+
+    @property
+    def tenants(self) -> Dict[Any, int]:
+        return dict(self._tenants)
+
+    def tenant_state(self, tenant) -> TenantSlots:
+        """This tenant's state row (policy state, matcher state, AoI,
+        clocks) — a snapshot for inspection/parity checks."""
+        slot = self._tenants[tenant]
+        return jax.tree_util.tree_map(lambda x: x[slot], self._state)
+
+    # -------------------------------------------------------------- serving
+    def serve(self, requests: Sequence[ServeRequest]) -> List[np.ndarray]:
+        """Serve a batch of requests; returns each request's (M,) channel
+        assignment, in request order.
+
+        Requests are packed into fixed-``slots`` steps; a second request for
+        a tenant already in the current step is deferred to the next one
+        (live scatter rows must be unique), and short final steps are padded
+        with masked scratch-slot rows — the step shape, and therefore the
+        executable, never changes.
+        """
+        n, m = self.scheduler.n_channels, self.scheduler.n_clients
+        out: List[Optional[np.ndarray]] = [None] * len(requests)
+        pending = deque(enumerate(requests))
+        while pending:
+            batch = []
+            used = set()
+            deferred = []
+            while pending and len(batch) < self.slots:
+                i, rq = pending.popleft()
+                slot = self._tenants.get(rq.tenant)
+                if slot is None:
+                    raise KeyError(f"SchedServer.serve: unknown tenant "
+                                   f"{rq.tenant!r}")
+                if slot in used:
+                    deferred.append((i, rq))
+                    continue
+                used.add(slot)
+                batch.append((i, rq, slot))
+            pending.extendleft(reversed(deferred))
+
+            slots = np.full((self.slots,), self.capacity, np.int32)
+            rewards = np.zeros((self.slots, n), np.float32)
+            keys = np.zeros((self.slots, 2), np.uint32)
+            contrib = np.ones((self.slots, m), np.float32)
+            mask = np.zeros((self.slots,), bool)
+            for j, (i, rq, slot) in enumerate(batch):
+                slots[j] = slot
+                rewards[j] = np.asarray(rq.rewards, np.float32)
+                keys[j] = np.asarray(rq.key, np.uint32)
+                if rq.contrib is not None:
+                    contrib[j] = np.asarray(rq.contrib, np.float32)
+                mask[j] = True
+            self._state, assignment = self._step(
+                self._state, jnp.asarray(slots), jnp.asarray(rewards),
+                jnp.asarray(keys), jnp.asarray(contrib), jnp.asarray(mask))
+            assignment = np.asarray(assignment)   # the decision must retire
+            for j, (i, rq, slot) in enumerate(batch):
+                out[i] = assignment[j]
+            self._served += len(batch)
+            self._steps += 1
+        return out    # type: ignore[return-value]
+
+    def stats(self) -> Dict[str, Any]:
+        return {"tenants": len(self._tenants), "capacity": self.capacity,
+                "slots": self.slots, "served": self._served,
+                "steps": self._steps, "compiles": self.compiles,
+                "compile_s": self.compile_s}

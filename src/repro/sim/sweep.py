@@ -200,9 +200,21 @@ def clear_sweep_cache() -> None:
     _EXEC_STATS.update(hits=0, misses=0)
 
 
-def _compile_cached(cache_key, do_lower):
-    """AOT-compile through the executable cache; returns (compiled, compile_s,
-    cache_hit)."""
+def cached_compile(cache_key, do_lower):
+    """AOT-compile through the process-level executable cache.
+
+    ``do_lower()`` must return a ``jax.stages.Lowered``; its ``.compile()``
+    result is memoized under ``cache_key`` and returned as ``(compiled,
+    compile_s, cache_hit)``.  A compiled executable must be invoked with
+    the exact arg/kwarg split it was lowered with.
+
+    Public so other drivers share ONE cache and ONE accounting stream with
+    the sweep: the multi-tenant serving loop (``repro.sim.serve``) registers
+    its step/admit executables here, which is what makes tenant churn
+    attributably recompile-free — ``sweep_cache_stats()`` misses stay flat
+    across join/leave because every churn event re-enters an executable
+    this cache already holds.
+    """
     compiled = _EXEC_CACHE.get(cache_key)
     if compiled is not None:
         _EXEC_STATS["hits"] += 1
@@ -213,6 +225,9 @@ def _compile_cached(cache_key, do_lower):
     _EXEC_CACHE[cache_key] = compiled
     _EXEC_STATS["misses"] += 1
     return compiled, compile_s, False
+
+
+_compile_cached = cached_compile  # internal alias kept for the bucket runners
 
 
 def _mesh_desc(mesh) -> Any:

@@ -14,6 +14,8 @@ Contracts under test (tentpole of the streaming-detector PR):
 * the geometric split grid lower-bounds the dense sup and its detection
   delay is bounded on seeded change-point streams.
 """
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -293,6 +295,107 @@ def _first_fire(stream, h, grid, delta=1e-3):
         if float(stats[0]) > float(glr_threshold(jnp.asarray(n), delta)):
             return i
     return None
+
+
+# ---------------------------------------------------------------------------
+# tenant axis (serving loop: tenants = the kernel grid's leading axis)
+# ---------------------------------------------------------------------------
+
+def _tenant_state(g, n, h, seed):
+    """A (G, N, ...) stack of consistent per-tenant prefix states."""
+    rng = np.random.default_rng(seed)
+    counts = jnp.asarray(rng.integers(0, 3 * h, (g, n)), jnp.float32)
+    total = jnp.asarray(rng.random((g, n)) * 10, jnp.float32)
+    base = jnp.asarray(rng.random((g, n)), jnp.float32)
+    cum = jnp.asarray(np.sort(rng.random((g, n, h)), axis=-1),
+                      jnp.float32) + base[..., None]
+    r_vec = jnp.asarray(rng.random((g, n)), jnp.float32)
+    sched = jnp.asarray(rng.random((g, n)) < 0.7)
+    return cum, total, base, counts, r_vec, sched
+
+
+@pytest.mark.parametrize("split_grid", ["all", "geometric"])
+@pytest.mark.parametrize("g,n,h", [(1, 5, 32), (3, 5, 96), (4, 9, 64)])
+def test_glr_step_tenant_axis_matches_per_tenant(split_grid, g, n, h):
+    """3-D (tenants, channels, history) inputs: the tenant-axis kernel
+    matches both the vmapped jnp oracle and the per-tenant 2-D kernel."""
+    args = _tenant_state(g, n, h, seed=g * h + n)
+    got = ops.glr_step(*args, split_grid=split_grid,
+                       backend="pallas_interpret")
+    want = ops.glr_step(*args, split_grid=split_grid, backend="jnp")
+    for gt, wt in zip(got, want):
+        assert gt.shape == wt.shape
+        np.testing.assert_allclose(np.asarray(gt), np.asarray(wt),
+                                   rtol=1e-5, atol=1e-5)
+    for t in range(g):
+        per = ops.glr_step(*(a[t] for a in args), split_grid=split_grid,
+                           backend="pallas_interpret")
+        for gt, pt in zip(got, per):
+            np.testing.assert_allclose(np.asarray(gt[t]), np.asarray(pt),
+                                       rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("split_grid", ["all", "geometric"])
+def test_glr_step_vmap_routes_to_tenant_kernel(split_grid):
+    """``jax.vmap`` over the 2-D pallas step lowers through the custom-vmap
+    rule to the tenant kernel (ONE pallas_call, tenants = grid axis) and
+    agrees with per-row invocations."""
+    g = 4
+    args = _tenant_state(g, 6, 32, seed=5)
+    f = functools.partial(ops.glr_step, split_grid=split_grid,
+                          backend="pallas_interpret")
+    got = jax.jit(jax.vmap(f))(*args)
+    for t in range(g):
+        per = f(*(a[t] for a in args))
+        for gt, pt in zip(got, per):
+            np.testing.assert_allclose(np.asarray(gt[t]), np.asarray(pt),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# split_grid="auto": structural dense->geometric switch
+# ---------------------------------------------------------------------------
+
+def test_auto_split_grid_switch_point():
+    """The auto grid is resolved structurally from the window size: dense
+    while ``history <= auto_split_h``, geometric strictly above — pinned at
+    the boundary on both the configurable and the default threshold."""
+    mk = lambda h: GLRCUCB(4, 2, history=h, split_grid="auto",
+                           auto_split_h=64)
+    assert mk(32).resolved_split_grid() == "all"
+    assert mk(64).resolved_split_grid() == "all"        # boundary: dense
+    assert mk(65).resolved_split_grid() == "geometric"
+    assert mk(512).resolved_split_grid() == "geometric"
+    dflt = lambda h: GLRCUCB(4, 2, history=h, split_grid="auto")
+    assert dflt(4096).resolved_split_grid() == "all"
+    assert dflt(4097).resolved_split_grid() == "geometric"
+    # explicit grids are never overridden by the threshold
+    assert GLRCUCB(4, 2, history=8192,
+                   split_grid="all").resolved_split_grid() == "all"
+    assert GLRCUCB(4, 2, history=16,
+                   split_grid="geometric").resolved_split_grid() == "geometric"
+
+
+def test_auto_split_grid_config_validation():
+    with pytest.raises(ValueError, match="auto_split_h"):
+        GLRCUCB(4, 2, split_grid="auto", auto_split_h=0)
+    with pytest.raises(ValueError, match="streaming"):
+        GLRCUCB(4, 2, detector_impl="recompute", split_grid="auto")
+
+
+@pytest.mark.parametrize("history,explicit", [(48, "all"), (49, "geometric")])
+def test_auto_split_grid_boundary_agreement(history, explicit):
+    """On either side of the switch point, an auto-grid GLR-CUCB trajectory
+    is bitwise identical to the matching explicit grid."""
+    n, m, t_rounds = 5, 2, 200
+    env = random_piecewise_env(jax.random.fold_in(KEY, 77), n, t_rounds, 3)
+    mk = lambda grid: GLRCUCB(n, m, history=history, detector_stride=3,
+                              split_grid=grid, auto_split_h=48)
+    _, st_a = _restart_trace(mk("auto"), env, t_rounds)
+    _, st_e = _restart_trace(mk(explicit), env, t_rounds)
+    for a, e in zip(jax.tree_util.tree_leaves(st_a),
+                    jax.tree_util.tree_leaves(st_e)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
 
 
 @pytest.mark.parametrize("p0,p1,changepoint", [
