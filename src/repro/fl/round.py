@@ -57,6 +57,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aoi import init_aoi, update_aoi, aoi_variance
 from repro.core.bandits.base import init_with_hp
@@ -94,6 +95,21 @@ class AsyncFLState(NamedTuple):
                                    # zeros for open-loop canonical forms)
     staleness: jnp.ndarray         # (M,) age of the buffered G~ in rounds —
                                    # NOT AoI, which resets only on aggregation
+
+
+class _ServedPre(NamedTuple):
+    """Everything a round computes BEFORE the scheduling decision — the
+    half of ``_round_impl`` that runs trainer-side when the decision itself
+    comes from a ``SchedServer`` (``run_served``).  ``ch_states`` is the
+    realized channel vector the trainer posts as the request's rewards."""
+
+    buffers: jnp.ndarray       # (M, P) post-Eq.-6 carry
+    has_update: jnp.ndarray    # (M,)
+    staleness: jnp.ndarray     # (M,)
+    active: jnp.ndarray        # (M,)
+    dropped: jnp.ndarray       # (M,)
+    local_losses: jnp.ndarray  # (M,)
+    ch_states: jnp.ndarray     # (N,) realized Good/Bad vector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -485,3 +501,229 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
                 f"run: batches leading axis {batches_x.shape[0]} != keys {r}")
         fn = self._run_plain if jax.default_backend() == "cpu" else self._run_donated
         return fn(state, batches_x, batches_y, keys, self.env)
+
+    # ------------------------------------------------- served (SchedServer)
+    def _served_pre_impl(self, state, batches_x, batches_y, key, env):
+        """Steps 1-2 + the Eq.-6 carry + the channel realization — the
+        exact pre-decision dataflow of ``_round_impl`` (same PRNG layout:
+        the select half of the round key belongs to the server)."""
+        cfg = self.cfg
+        m = cfg.n_clients
+        k_env, _ = jax.random.split(key)
+        t = state.t
+
+        def one_client(bx, by):
+            g_tree, loss = local_sgd(self.loss_fn, state.params, bx, by,
+                                     cfg.client_lr)
+            return tree_flatten_concat(g_tree), loss
+
+        fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
+        if self.faults is not None:
+            k_fault = jax.random.fold_in(key, _FAULT_TAG)
+            fresh_updates, dropped = self.faults.inject(k_fault, t,
+                                                        fresh_updates)
+        else:
+            dropped = jnp.zeros((m,), jnp.float32)
+        active = state.last_success * (1.0 - dropped)
+        buffers = jnp.where(active[:, None] > 0.5, fresh_updates, state.buffers)
+        has_update = jnp.maximum(state.has_update, active)
+        staleness = jnp.where(active > 0.5, 1.0, state.staleness + 1.0)
+        ch_states = env.sample_dyn(t, k_env, state.env_state)
+        return _ServedPre(buffers=buffers, has_update=has_update,
+                          staleness=staleness, active=active, dropped=dropped,
+                          local_losses=local_losses, ch_states=ch_states)
+
+    def _served_post_impl(self, state, pre, assignment, matcher_state, env):
+        """Steps 3 (post-decision) + 4 + bookkeeping, given the server's
+        assignment and post-step matcher row.  The scheduler state is the
+        SERVER's responsibility — the trainer's ``sched_state`` leaf is
+        carried unchanged (dead weight kept for pytree stability)."""
+        cfg = self.cfg
+        m = cfg.n_clients
+        t = state.t
+        buffers, has_update, staleness = (pre.buffers, pre.has_update,
+                                          pre.staleness)
+        sched_mask = jnp.zeros((cfg.n_channels,), jnp.float32)
+        sched_mask = sched_mask.at[assignment].set(1.0)
+        env_state = env.interact_step(state.env_state, t, sched_mask)
+        success = (pre.ch_states[assignment] > 0.5).astype(jnp.float32)
+        success = success * has_update
+        success = success * (1.0 - pre.dropped)
+
+        if cfg.quarantine:
+            row_ok = jnp.all(jnp.isfinite(buffers), axis=1)
+            if cfg.max_update_norm > 0.0:
+                row_ok = row_ok & (
+                    jnp.linalg.norm(buffers, axis=1) <= cfg.max_update_norm)
+            row_ok = row_ok.astype(jnp.float32)
+        else:
+            row_ok = jnp.ones((m,), jnp.float32)
+        if cfg.staleness_cap > 0:
+            fresh_ok = (staleness <= float(cfg.staleness_cap)).astype(jnp.float32)
+        else:
+            fresh_ok = jnp.ones((m,), jnp.float32)
+        agg_mask = success * row_ok * fresh_ok
+        n_succ = jnp.sum(agg_mask)
+
+        zeta = state.zeta if cfg.use_zeta else jnp.full((m,), 1.0 / m)
+        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        if cfg.quarantine:
+            agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
+        else:
+            agg_buffers = buffers
+        agg_flat = ops.weighted_aggregate(agg_buffers, scale)
+        step_vec = -cfg.server_lr / m * agg_flat
+        delta = tree_unflatten_concat(step_vec, state.params)
+        if cfg.quarantine:
+            any_agg = n_succ > 0.0
+            params = jax.tree_util.tree_map(
+                lambda p_, d: jnp.where(any_agg, p_ + d.astype(p_.dtype), p_),
+                state.params, delta)
+        else:
+            params = jax.tree_util.tree_map(
+                lambda p_, d: (p_ + d.astype(p_.dtype)), state.params, delta)
+
+        bad_row = 1.0 - row_ok
+        stale_reject = success * row_ok * (1.0 - fresh_ok)
+        has_update = has_update * row_ok
+        last_success = jnp.maximum(agg_mask, jnp.maximum(bad_row, stale_reject))
+
+        aoi = update_aoi(state.aoi, agg_mask > 0.5)
+        params_flat = tree_flatten_concat(params)
+        contrib_buf = update_buffer(
+            state.contrib_buf, agg_mask > 0.5, agg_buffers,
+            jnp.broadcast_to(params_flat, buffers.shape))
+        contrib = marginal_contribution(contrib_buf, zeta, self.proxy_loss_fn)
+        new_zeta = aggregation_weights(contrib)
+
+        new_state = AsyncFLState(
+            params=params,
+            buffers=buffers,
+            has_update=has_update,
+            last_success=last_success,
+            aoi=aoi,
+            contrib_buf=contrib_buf,
+            contrib=contrib,
+            zeta=new_zeta,
+            sched_state=state.sched_state,
+            matcher_state=matcher_state,
+            t=t + 1,
+            env_state=env_state,
+            staleness=staleness,
+        )
+        loss_ok = jnp.isfinite(pre.local_losses).astype(jnp.float32)
+        loss_w = pre.active * loss_ok
+        metrics = {
+            "local_loss": jnp.sum(
+                jnp.where(loss_ok > 0.5, pre.local_losses, 0.0) * pre.active)
+            / jnp.maximum(jnp.sum(loss_w), 1.0),
+            "n_success": n_succ,
+            "mean_aoi": jnp.mean(aoi),
+            "aoi_var": aoi_variance(aoi),
+            "beta_t": matcher_state.beta_t,
+            "zeta_max": jnp.max(new_zeta),
+        }
+        return new_state, metrics
+
+    # Both served halves lower at batch 1 through a vmap, exactly like
+    # `_run_batch1` — sharing the batched shapes is what keeps the served
+    # trajectory bitwise-equal to `run()` (see `_run_vmapped`'s rationale).
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _served_pre_jit(self, state, batches_x, batches_y, key, env):
+        lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+
+        def one(s, bx, by, k):
+            return self._served_pre_impl(s, bx, by, k, env)
+
+        out = jax.vmap(one)(lift(state), batches_x[None], batches_y[None],
+                            key[None])
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _served_post_jit(self, state, pre, assignment, matcher_state, env):
+        lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+
+        def one(s, p, a, ms):
+            return self._served_post_impl(s, p, a, ms, env)
+
+        out = jax.vmap(one)(lift(state), lift(pre), assignment[None],
+                            lift(matcher_state))
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    def _validate_server(self, server, n_clients: Optional[int] = None) -> None:
+        m = self.cfg.n_clients if n_clients is None else n_clients
+        if not (self.cfg.use_matching and server.use_matching):
+            raise ValueError(
+                "run_served: requires use_matching=True on both the trainer "
+                "cfg and the SchedServer (the server's non-matching path "
+                "owns AoI semantics the trainer cannot override)")
+        if float(server.matcher_beta) != float(self.cfg.matcher_beta):
+            raise ValueError(
+                f"run_served: matcher_beta mismatch (trainer "
+                f"{self.cfg.matcher_beta}, server {server.matcher_beta})")
+        if (server.scheduler.n_channels != self.cfg.n_channels
+                or server.scheduler.n_clients != m):
+            raise ValueError(
+                f"run_served: server scheduler dims "
+                f"(N={server.scheduler.n_channels}, "
+                f"M={server.scheduler.n_clients}) do not match the trainer "
+                f"(N={self.cfg.n_channels}, M={m})")
+        want = "mean" if (getattr(self.env, "score_kind", "ucb") == "mean"
+                          and getattr(self.scheduler, "mean_scores", None)
+                          is not None) else "ucb"
+        if server.score_kind != want:
+            raise ValueError(
+                f"run_served: this trainer's env routes matcher scores via "
+                f"{want!r} but the server was built with "
+                f"score_kind={server.score_kind!r}")
+
+    def run_served(
+        self,
+        state: AsyncFLState,
+        batches_x: jnp.ndarray,    # (R, M, E, B, ...)
+        batches_y: jnp.ndarray,    # (R, M, E, B)
+        keys: jnp.ndarray,         # (R,) per-round PRNG keys
+        server,                    # a repro.sim.SchedServer
+        tenant,
+    ) -> Tuple[AsyncFLState, Dict[str, jnp.ndarray]]:
+        """Run R rounds consuming the scheduling decision from ``server``.
+
+        Each round the trainer computes Steps 1-2 locally, posts its
+        realized channel vector, round key, contributions and AoI to the
+        server (``ServeRequest``), and finishes Steps 3-4 with the returned
+        assignment and matcher row — many trainers this way share ONE
+        scheduler service.  ``tenant`` must already be joined (join it with
+        this trainer's scheduler init key/hp to reproduce ``run()``: the
+        served trajectory is then bitwise identical to the standalone scan,
+        with the policy state living in the server's tenant row instead of
+        ``state.sched_state``).  Closed-loop envs work — the trainer owns
+        the env and posts realized vectors, so the feedback loop never
+        leaves the trainer.
+        """
+        self._validate_server(server)
+        from repro.sim.serve import ServeRequest   # deferred: sim imports fl
+
+        r = int(keys.shape[0])
+        if int(batches_x.shape[0]) != r or int(batches_y.shape[0]) != r:
+            raise ValueError(
+                f"run_served: batches leading axis {batches_x.shape[0]} != "
+                f"keys {r}")
+        metrics_rounds = []
+        for i in range(r):
+            k = keys[i]
+            pre = self._served_pre_jit(state, batches_x[i], batches_y[i], k,
+                                       self.env)
+            dec = server.serve_decisions([ServeRequest(
+                tenant, rewards=np.asarray(pre.ch_states),
+                key=np.asarray(k), contrib=np.asarray(state.contrib),
+                aoi=np.asarray(state.aoi))])[0]
+            mstate = MatcherState(
+                v_max=jnp.asarray(dec.matcher_state.v_max),
+                a_max=jnp.asarray(dec.matcher_state.a_max),
+                beta_t=jnp.asarray(dec.matcher_state.beta_t))
+            state, mets = self._served_post_jit(
+                state, pre, jnp.asarray(dec.assignment), mstate, self.env)
+            metrics_rounds.append(mets)
+        metrics = {k2: jnp.stack([mm[k2] for mm in metrics_rounds])
+                   for k2 in metrics_rounds[0]}
+        return state, metrics

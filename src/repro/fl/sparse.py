@@ -64,6 +64,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.aoi import aoi_variance, init_aoi, update_aoi
 from repro.core.availability import AvailabilityProcess
@@ -111,6 +112,25 @@ class SparseFLState(NamedTuple):
     matcher_state: MatcherState
     t: jnp.ndarray
     env_state: jnp.ndarray
+
+
+class _SparseServedPre(NamedTuple):
+    """The pre-decision half of the sparse round (Select + Gather + train +
+    Eq.-6 carry + channel realization) for ``run_served`` — everything up
+    to the point where the scheduling decision is needed."""
+
+    sel: jnp.ndarray           # (M,) selected client ids, ascending
+    avail_sel: jnp.ndarray     # (M,)
+    carried_cb: ContributionBuffer
+    buffers: jnp.ndarray       # (M, P)
+    has_update: jnp.ndarray    # (M,)
+    stale_sel: jnp.ndarray     # (M,)
+    active: jnp.ndarray        # (M,)
+    dropped: jnp.ndarray       # (M,)
+    local_losses: jnp.ndarray  # (M,)
+    ch_states: jnp.ndarray     # (N,)
+    aoi_sel: jnp.ndarray       # (M,) — posted to the server
+    contrib_sel: jnp.ndarray   # (M,) — posted to the server
 
 
 @dataclasses.dataclass(frozen=True)
@@ -478,3 +498,266 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
         R · N.
         """
         return self._run_plain(state, client_x, client_y, keys, self.env)
+
+    # ------------------------------------------------- served (SchedServer)
+    def _served_pre_impl(self, state, client_x, client_y, key, env):
+        """Select + Gather + Steps 1-2 + the Eq.-6 slot carry + channel
+        realization — ``_round_impl``'s pre-decision dataflow, verbatim."""
+        cfg = self.cfg
+        m = cfg.n_sched
+        k_env, _ = jax.random.split(key)
+        t = state.t
+
+        sel = self._select(state)
+        avail_sel = jnp.take(state.avail, sel)
+        prev_slot = jnp.take(state.slot_of, sel)
+        carry_ok = prev_slot >= 0
+        src = jnp.clip(prev_slot, 0, m - 1)
+        carried = jnp.where(carry_ok[:, None],
+                            jnp.take(state.buffers, src, axis=0), 0.0)
+        cb = state.contrib_buf
+        carried_cb = ContributionBuffer(
+            grads=jnp.where(carry_ok[:, None],
+                            jnp.take(cb.grads, src, axis=0), 0.0),
+            params=jnp.where(carry_ok[:, None],
+                             jnp.take(cb.params, src, axis=0), 0.0),
+            fresh=jnp.where(carry_ok, jnp.take(cb.fresh, src), 0.0),
+        )
+
+        k_data = jax.random.fold_in(key, _DATA_TAG)
+        idx = client_batch_indices(k_data, sel, int(client_y.shape[1]),
+                                   cfg.local_epochs, cfg.batch_size)
+        batches_x, batches_y = gather_client_batches(
+            client_x, client_y, sel, idx)
+
+        def one_client(bx, by):
+            g_tree, loss = local_sgd(self.loss_fn, state.params, bx, by,
+                                     cfg.client_lr)
+            return tree_flatten_concat(g_tree), loss
+
+        fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
+        if self.faults is not None:
+            k_fault = jax.random.fold_in(key, _FAULT_TAG)
+            fresh_updates, dropped = self.faults.inject(k_fault, t,
+                                                        fresh_updates)
+        else:
+            dropped = jnp.zeros((m,), jnp.float32)
+        active = jnp.where(avail_sel > 0.5,
+                           jnp.take(state.last_success, sel) * (1.0 - dropped),
+                           0.0)
+        buffers = jnp.where(active[:, None] > 0.5, fresh_updates, carried)
+        has_update = jnp.maximum(jnp.take(state.has_update, sel), active)
+        stale_sel = jnp.where(active > 0.5, 1.0,
+                              jnp.take(state.staleness, sel) + 1.0)
+        ch_states = env.sample_dyn(t, k_env, state.env_state)
+        return _SparseServedPre(
+            sel=sel, avail_sel=avail_sel, carried_cb=carried_cb,
+            buffers=buffers, has_update=has_update, stale_sel=stale_sel,
+            active=active, dropped=dropped, local_losses=local_losses,
+            ch_states=ch_states, aoi_sel=jnp.take(state.aoi, sel),
+            contrib_sel=jnp.take(state.contrib, sel))
+
+    def _served_post_impl(self, state, pre, assignment, matcher_state, key,
+                          env):
+        """Steps 3 (post-decision) + 4 + scatter + availability, given the
+        server's assignment and post-step matcher row; the trainer's
+        ``sched_state`` leaf is carried unchanged (the server owns it)."""
+        cfg = self.cfg
+        n, m = cfg.n_clients, cfg.n_sched
+        t = state.t
+        sel, avail_sel = pre.sel, pre.avail_sel
+        buffers, has_update, stale_sel = (pre.buffers, pre.has_update,
+                                          pre.stale_sel)
+        active, dropped = pre.active, pre.dropped
+
+        sched_mask = jnp.zeros((cfg.n_channels,), jnp.float32)
+        sched_mask = sched_mask.at[assignment].set(1.0)
+        env_state = env.interact_step(state.env_state, t, sched_mask)
+        success = (pre.ch_states[assignment] > 0.5).astype(jnp.float32)
+        success = success * has_update
+        success = success * (1.0 - dropped)
+        success = jnp.where(avail_sel > 0.5, success, 0.0)
+
+        if cfg.quarantine:
+            row_ok = jnp.all(jnp.isfinite(buffers), axis=1)
+            if cfg.max_update_norm > 0.0:
+                row_ok = row_ok & (
+                    jnp.linalg.norm(buffers, axis=1) <= cfg.max_update_norm)
+            row_ok = row_ok.astype(jnp.float32)
+        else:
+            row_ok = jnp.ones((m,), jnp.float32)
+        if cfg.staleness_cap > 0:
+            fresh_ok = (stale_sel <= float(cfg.staleness_cap)).astype(jnp.float32)
+        else:
+            fresh_ok = jnp.ones((m,), jnp.float32)
+        agg_mask = success * row_ok * fresh_ok
+        n_succ = jnp.sum(agg_mask)
+
+        zeta = (jnp.take(state.zeta, sel) if cfg.use_zeta
+                else jnp.full((m,), 1.0 / m))
+        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        if cfg.quarantine:
+            agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
+        else:
+            agg_buffers = buffers
+        agg_flat = ops.weighted_aggregate(agg_buffers, scale)
+        step_vec = -cfg.server_lr / m * agg_flat
+        delta = tree_unflatten_concat(step_vec, state.params)
+        if cfg.quarantine:
+            any_agg = n_succ > 0.0
+            params = jax.tree_util.tree_map(
+                lambda p_, d: jnp.where(any_agg, p_ + d.astype(p_.dtype), p_),
+                state.params, delta)
+        else:
+            params = jax.tree_util.tree_map(
+                lambda p_, d: (p_ + d.astype(p_.dtype)), state.params, delta)
+
+        bad_row = 1.0 - row_ok
+        stale_reject = success * row_ok * (1.0 - fresh_ok)
+        has_update = has_update * row_ok
+        last_success_sel = jnp.maximum(agg_mask,
+                                       jnp.maximum(bad_row, stale_reject))
+
+        params_flat = tree_flatten_concat(params)
+        contrib_buf = update_buffer(
+            pre.carried_cb, agg_mask > 0.5, agg_buffers,
+            jnp.broadcast_to(params_flat, buffers.shape))
+        contrib_rows = marginal_contribution(contrib_buf, zeta,
+                                             self.proxy_loss_fn)
+        zeta_rows = aggregation_weights(contrib_rows)
+
+        active_full = jnp.zeros((n,), jnp.float32).at[sel].set(active)
+        agg_full = jnp.zeros((n,), jnp.float32).at[sel].set(agg_mask)
+        aoi = update_aoi(state.aoi, agg_full > 0.5)
+        staleness = jnp.where(active_full > 0.5, 1.0, state.staleness + 1.0)
+        staleness = staleness.at[sel].set(stale_sel)
+
+        clear_idx = jnp.where(state.slot_clients >= 0, state.slot_clients, n)
+        slot_of = state.slot_of.at[clear_idx].set(-1, mode="drop")
+        slot_of = slot_of.at[sel].set(jnp.arange(m, dtype=jnp.int32))
+        prev = state.slot_clients
+        still = jnp.where(prev >= 0,
+                          jnp.take(slot_of, jnp.clip(prev, 0, n - 1)) >= 0,
+                          True)
+        evicted = (prev >= 0) & ~still
+        evict_ids = jnp.where(evicted, prev, n)
+
+        has_update_full = state.has_update.at[sel].set(has_update)
+        has_update_full = has_update_full.at[evict_ids].set(0.0, mode="drop")
+        last_success = state.last_success.at[sel].set(last_success_sel)
+        last_success = last_success.at[evict_ids].set(1.0, mode="drop")
+        contrib_full = state.contrib.at[sel].set(contrib_rows)
+        zeta_full = state.zeta.at[sel].set(zeta_rows)
+
+        if self.availability is not None:
+            k_avail = jax.random.fold_in(key, _AVAIL_TAG)
+            grant_full = jnp.zeros((n,), jnp.float32).at[sel].set(
+                jnp.where(avail_sel > 0.5, 1.0, 0.0))
+            avail_state, avail = self.availability.step(
+                k_avail, t, state.avail_state, grant_full)
+        else:
+            avail_state, avail = state.avail_state, state.avail
+
+        new_state = SparseFLState(
+            params=params,
+            buffers=buffers,
+            slot_clients=sel,
+            contrib_buf=contrib_buf,
+            slot_of=slot_of,
+            has_update=has_update_full,
+            last_success=last_success,
+            aoi=aoi,
+            staleness=staleness,
+            contrib=contrib_full,
+            zeta=zeta_full,
+            avail=avail,
+            avail_state=avail_state,
+            sched_state=state.sched_state,
+            matcher_state=matcher_state,
+            t=t + 1,
+            env_state=env_state,
+        )
+        loss_ok = jnp.isfinite(pre.local_losses).astype(jnp.float32)
+        loss_w = active * loss_ok
+        metrics = {
+            "local_loss": jnp.sum(
+                jnp.where(loss_ok > 0.5, pre.local_losses, 0.0) * active)
+            / jnp.maximum(jnp.sum(loss_w), 1.0),
+            "n_success": n_succ,
+            "mean_aoi": jnp.mean(aoi),
+            "aoi_var": aoi_variance(aoi),
+            "beta_t": matcher_state.beta_t,
+            "zeta_max": jnp.max(zeta_rows),
+            "n_evicted": jnp.sum(evicted.astype(jnp.float32)),
+            "n_available": jnp.sum(state.avail),
+        }
+        return new_state, metrics
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _served_pre_jit(self, state, client_x, client_y, key, env):
+        lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+
+        def one(s, k):
+            return self._served_pre_impl(s, client_x, client_y, k, env)
+
+        out = jax.vmap(one)(lift(state), key[None])
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    @functools.partial(jax.jit, static_argnames=("self",))
+    def _served_post_jit(self, state, pre, assignment, matcher_state, key,
+                         env):
+        lift = functools.partial(jax.tree_util.tree_map, lambda x: x[None])
+
+        def one(s, p, a, ms, k):
+            return self._served_post_impl(s, p, a, ms, k, env)
+
+        out = jax.vmap(one)(lift(state), lift(pre), assignment[None],
+                            lift(matcher_state), key[None])
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    def run_served(
+        self,
+        state: SparseFLState,
+        client_x: jnp.ndarray,     # (N, n, ...) full per-client datasets
+        client_y: jnp.ndarray,     # (N, n)
+        keys: jnp.ndarray,         # (R,) per-round PRNG keys
+        server,                    # a repro.sim.SchedServer
+        tenant,
+    ) -> Tuple[SparseFLState, Dict[str, jnp.ndarray]]:
+        """Run R sparse rounds consuming schedules from ``server``.
+
+        The trainer selects its top-M clients, trains them, and posts the
+        realized channel vector, round key, the SELECTED clients'
+        contributions and AoI (the (M,) slices the fused round feeds the
+        scheduler/matcher) — the server answers with the (M,) assignment
+        and matcher row.  ``tenant`` must be joined with this trainer's
+        scheduler init key/hp; the served trajectory then reproduces the
+        standalone ``run()`` bitwise (``tests/test_fl_served.py``), with
+        the policy state living in the server's tenant row.
+        """
+        # the dense trainer's validation logic applies verbatim — the
+        # server's client dim must equal the slot count M = n_sched
+        from repro.fl.round import AsyncFLTrainer
+        AsyncFLTrainer._validate_server(self, server,
+                                        n_clients=self.cfg.n_sched)
+        from repro.sim.serve import ServeRequest   # deferred: sim imports fl
+
+        r = int(keys.shape[0])
+        metrics_rounds = []
+        for i in range(r):
+            k = keys[i]
+            pre = self._served_pre_jit(state, client_x, client_y, k, self.env)
+            dec = server.serve_decisions([ServeRequest(
+                tenant, rewards=np.asarray(pre.ch_states),
+                key=np.asarray(k), contrib=np.asarray(pre.contrib_sel),
+                aoi=np.asarray(pre.aoi_sel))])[0]
+            mstate = MatcherState(
+                v_max=jnp.asarray(dec.matcher_state.v_max),
+                a_max=jnp.asarray(dec.matcher_state.a_max),
+                beta_t=jnp.asarray(dec.matcher_state.beta_t))
+            state, mets = self._served_post_jit(
+                state, pre, jnp.asarray(dec.assignment), mstate, k, self.env)
+            metrics_rounds.append(mets)
+        metrics = {k2: jnp.stack([mm[k2] for mm in metrics_rounds])
+                   for k2 in metrics_rounds[0]}
+        return state, metrics

@@ -21,9 +21,13 @@ Public API:
   sharded_aoi_regret_batch   shard_map'd engine over a 1-D device mesh
   sweep_mesh                 1-D mesh over local devices
   SchedServer / ServeRequest multi-tenant scheduler-as-a-service: one
-                             compiled step answers (tenant, rewards) ->
+  / ServeDecision            compiled step answers (tenant, rewards) ->
                              schedule for a whole pool of concurrent FL
-                             jobs; churn-free join/leave (see serve.py)
+                             jobs; churn-free join/leave, pipelined
+                             serve_stream, sharded 10^4+ capacity
+                             (see serve.py)
+  shard_slots                NamedSharding placement of tenant-slot state
+                             over the 1-D "cases" mesh
   make_serve_step /          the functional serving core (batched step,
   make_admit / init_slots    slot admission, slot-state init)
   offline_round_stream       the (keys, states) stream for bitwise parity
@@ -33,6 +37,7 @@ from repro.sim.engine import simulate_aoi_regret_batch
 from repro.sim.fl_batch import simulate_fl_batch
 from repro.sim.shard import (
     pad_batch,
+    shard_slots,
     sharded_aoi_regret_batch,
     sweep_mesh,
     unpad_batch,
@@ -49,6 +54,7 @@ from repro.sim.sweep import (
 )
 from repro.sim.serve import (
     SchedServer,
+    ServeDecision,
     ServeRequest,
     TenantSlots,
     init_slots,
@@ -73,8 +79,10 @@ __all__ = [
     "pad_batch",
     "unpad_batch",
     "SchedServer",
+    "ServeDecision",
     "ServeRequest",
     "TenantSlots",
+    "shard_slots",
     "init_slots",
     "make_admit",
     "make_serve_step",

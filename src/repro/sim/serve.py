@@ -19,8 +19,26 @@ Tenant-axis state contract
 * per-client AoI, the tenant's round clock ``t``, a membership flag, and
   decision/success counters.
 
-Every leaf has leading shape ``(capacity + 1, ...)``: row ``capacity`` is a
-scratch slot that absorbs padding writes (see below) and is never read.
+Every leaf has leading shape ``rows >= capacity + 1``: row ``capacity`` is
+a scratch slot that absorbs padding writes (see below) and is never read.
+Unsharded servers use exactly ``capacity + 1`` rows; sharded servers round
+``rows`` up to the device count (the extra rows are additional never-read
+scratch), so every leaf partitions evenly over the mesh.
+
+Sharded capacity
+----------------
+``SchedServer(..., shard=True)`` places every ``TenantSlots`` leaf over the
+1-D "cases" device mesh (``repro.sim.shard.shard_slots`` — the same
+``NamedSharding`` recipe the sparse FL client axis rides).  The serve step
+is gather / per-row compute / scatter on slot indices, so the tenant axis
+partitions exactly like the sparse client axis: XLA splits the O(capacity)
+state residency and the per-row math across devices with no cross-device
+traffic beyond the (slots,) gathers.  On a single device the placement is
+the identity — results are bitwise unchanged — which is what lets
+``capacity`` grow to 10^4–10^5 tenants without touching the step program.
+Host bookkeeping stays O(1) per join/leave at any capacity: the free-slot
+pool (``_FreePool``) is a fresh-slot counter plus a recycle stack, never an
+eagerly materialized list.
 
 Request batching / padding rules
 --------------------------------
@@ -39,6 +57,21 @@ Unlike ``sim/shard.py``'s pad-by-cycling (where duplicate rows recompute
 real *read-only* simulations), serve steps WRITE per-tenant state — cycling
 would double-update a tenant — hence the scratch-row scheme.
 
+Pipelined serving (``serve_stream``)
+------------------------------------
+``serve()`` is the synchronous loop: it converts each step's assignment to
+``np.ndarray`` (a device sync) before packing the next step.
+``serve_stream()`` is the pipelined generator: while step k executes on
+device, the host packs and dispatches step k+1 and only then converts step
+k's assignment — request batching and result conversion overlap the
+in-flight device step, and results come back with ONE STEP of latency
+(yielded in dispatch order).  The stream also autosizes the slot batch
+from observed queue depth, moving between AOT-cached executables (one per
+ladder size, all through ``cached_compile``) so resizing costs zero
+recompiles after warmup.  ``tests/test_serve_scale.py`` pins the stream's
+output bitwise-equal to the synchronous loop over the same request trace,
+including across churn and mid-stream resizes.
+
 Churn without recompiles
 ------------------------
 ``join``/``leave`` run one shared ``admit`` program that overwrites a
@@ -47,23 +80,35 @@ the traced hyper-parameter pytree are *inputs*, so joining, leaving and
 re-joining with different gamma/delta all re-enter the same executable.
 Both the step and admit programs are AOT-compiled through the sweep
 driver's process-level executable cache (``repro.sim.sweep.cached_compile``)
-— a churn episode of any length costs exactly the two warmup compiles and
+— a churn episode of any length costs exactly the warmup compiles and
 ``sweep_cache_stats()`` misses stay flat afterwards.
 
-Parity with the offline simulator
----------------------------------
+Parity with the offline simulator — and with the FL trainers
+------------------------------------------------------------
 The per-request transition calls ``repro.core.regret.policy_round`` — the
 exact function the offline ``simulate_aoi_regret`` scan body runs — so a
 single tenant served one request per round on the stream
 ``offline_round_stream(env, key, T)`` reproduces the offline simulation
 *bitwise* (state, AoI and restart counts; asserted in
 ``tests/test_serve.py`` and gated in CI via the ``serve_suite`` benchmark).
+
+FL trainers consume schedules from a server through the same protocol
+(``AsyncFLTrainer.run_served`` / ``SparseAsyncFLTrainer.run_served``): the
+trainer posts its realized channel vector, round key, contributions AND its
+own AoI (``ServeRequest.aoi`` — the trainer resets AoI on *aggregated*
+deliveries, not raw channel successes, so the server's select/match must
+read the caller's freshness state), and gets back the (M,) assignment plus
+the post-step matcher row (``ServeDecision``).  One trainer served this way
+reproduces its standalone ``run()`` bitwise (``tests/test_fl_served.py``).
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence
+from typing import (
+    Any, Dict, Iterable, Iterator, List, NamedTuple, Optional, Sequence,
+    Tuple,
+)
 
 import jax
 import jax.numpy as jnp
@@ -73,24 +118,27 @@ from repro.core.aoi import init_aoi, update_aoi
 from repro.core.bandits.base import init_with_hp
 from repro.core.matching import AdaptiveMatcher, MatcherState
 from repro.core.regret import policy_round
+from repro.sim.shard import shard_slots, sweep_mesh
 from repro.sim.sweep import _sched_sig, cached_compile
 
 
 class TenantSlots(NamedTuple):
-    """Device-resident state for ``capacity`` tenants + one scratch row.
+    """Device-resident state for ``capacity`` tenants + scratch row(s).
 
-    Every leaf's leading axis is ``capacity + 1``; row ``capacity`` is the
-    scratch slot padding writes land on (never read, never live).
+    Every leaf's leading axis is ``rows >= capacity + 1``; row ``capacity``
+    is the scratch slot padding writes land on (never read, never live).
+    Sharded servers may carry extra trailing scratch rows so ``rows``
+    divides the device mesh.
     """
 
-    sched_state: Any          # policy state pytree, leaves (C+1, ...) —
+    sched_state: Any          # policy state pytree, leaves (rows, ...) —
                               # includes the streaming-GLR prefix rings
-    matcher_state: MatcherState   # Sec.-V normalizers, leaves (C+1,)
-    aoi: jnp.ndarray          # (C+1, M) per-client AoI
-    t: jnp.ndarray            # (C+1,) int32 per-tenant round clock
-    active: jnp.ndarray       # (C+1,) bool membership mask
-    decisions: jnp.ndarray    # (C+1,) int32 requests served
-    successes: jnp.ndarray    # (C+1,) f32 cumulative successful transmissions
+    matcher_state: MatcherState   # Sec.-V normalizers, leaves (rows,)
+    aoi: jnp.ndarray          # (rows, M) per-client AoI
+    t: jnp.ndarray            # (rows,) int32 per-tenant round clock
+    active: jnp.ndarray       # (rows,) bool membership mask
+    decisions: jnp.ndarray    # (rows,) int32 requests served
+    successes: jnp.ndarray    # (rows,) f32 cumulative successful transmissions
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,18 +150,70 @@ class ServeRequest:
     ``key`` is the tenant's round key — for bitwise parity with the offline
     simulator, feed the keys ``offline_round_stream`` derives.  ``contrib``
     (optional, (M,)) carries the FL job's per-client marginal contributions
-    for the Sec.-V matcher; defaults to uniform.
+    for the Sec.-V matcher; defaults to uniform.  ``aoi`` (optional, (M,))
+    overrides the server's carried AoI row for this request's select/match:
+    FL trainers own their AoI semantics (reset on aggregation, not on raw
+    channel success) and post it here; ``None`` keeps the server's row.
     """
 
     tenant: Any
     rewards: Any
     key: Any
     contrib: Any = None
+    aoi: Any = None
 
 
-def init_slots(scheduler, capacity: int, matcher_beta: float = 0.5) -> TenantSlots:
-    """Fresh all-inactive slot state (``capacity + 1`` rows, see TenantSlots)."""
+class ServeDecision(NamedTuple):
+    """One request's full decision: the (M,) channel assignment plus the
+    post-step Sec.-V matcher row (``v_max``/``a_max``/``beta_t`` scalars) —
+    what an FL trainer needs to carry its matcher state bitwise."""
+
+    assignment: np.ndarray
+    matcher_state: MatcherState
+
+
+class _FreePool:
+    """O(1)-per-op free-slot pool over ``capacity`` slots.
+
+    Fresh slots are handed out from a monotonically advancing counter and
+    returned slots from a LIFO recycle stack, so construction, ``pop`` and
+    ``push`` cost O(1) at ANY capacity — a capacity=10^9 server's
+    bookkeeping is as cheap as a capacity=4 one (micro-tested in
+    ``tests/test_serve_scale.py``); nothing ever materializes an
+    O(capacity) Python structure.  Allocation order matches the legacy
+    eager list: fresh slots come out 0, 1, 2, ... and the most recently
+    freed slot is reused first.
+    """
+
+    __slots__ = ("_capacity", "_next_fresh", "_recycled")
+
+    def __init__(self, capacity: int):
+        self._capacity = capacity
+        self._next_fresh = 0
+        self._recycled: List[int] = []
+
+    def __len__(self) -> int:
+        return (self._capacity - self._next_fresh) + len(self._recycled)
+
+    def pop(self) -> int:
+        if self._recycled:
+            return self._recycled.pop()
+        if self._next_fresh < self._capacity:
+            slot = self._next_fresh
+            self._next_fresh += 1
+            return slot
+        raise IndexError("pop from empty _FreePool")
+
+    def push(self, slot: int) -> None:
+        self._recycled.append(slot)
+
+
+def init_slots(scheduler, capacity: int, matcher_beta: float = 0.5,
+               rows: Optional[int] = None) -> TenantSlots:
+    """Fresh all-inactive slot state (``rows`` defaults to ``capacity + 1``
+    — see TenantSlots; sharded servers pass a mesh-divisible ``rows``)."""
     matcher = AdaptiveMatcher(matcher_beta)
+    rows = capacity + 1 if rows is None else rows
 
     def row(key):
         return TenantSlots(
@@ -128,45 +228,57 @@ def init_slots(scheduler, capacity: int, matcher_beta: float = 0.5) -> TenantSlo
 
     # slot contents are placeholders until `admit` overwrites them (slots
     # start inactive); a fixed fan-out key keeps the initial state reproducible
-    return jax.vmap(row)(jax.random.split(jax.random.PRNGKey(0), capacity + 1))
+    return jax.vmap(row)(jax.random.split(jax.random.PRNGKey(0), rows))
 
 
 def make_serve_step(scheduler, use_matching: bool = False,
-                    matcher_beta: float = 0.5):
+                    matcher_beta: float = 0.5, score_kind: str = "ucb"):
     """Build the batched serving step ``(state, slots, rewards, keys,
-    contrib, mask) -> (state, assignment)``.
+    contrib, aoi, aoi_set, mask) -> (state, assignment, matcher_state)``.
 
     ``slots (B,) int32`` maps each request row to its tenant slot (pad rows
     target the scratch slot); ``rewards (B, N)``; ``keys (B, 2) uint32``
-    round keys; ``contrib (B, M)``; ``mask (B,) bool`` marks real rows.
-    Returns the updated state and the per-request ``(B, M)`` channel
-    assignment (pad/inactive rows: all -1).
+    round keys; ``contrib (B, M)``; ``aoi (B, M)`` per-request AoI override,
+    applied where ``aoi_set (B,) bool``; ``mask (B,) bool`` marks real rows.
+    Returns the updated state, the per-request ``(B, M)`` channel assignment
+    (pad/inactive rows: all -1) and the post-step matcher rows ((B,)-leaved
+    ``MatcherState`` — served FL trainers carry these).
 
     The per-request transition is ``repro.core.regret.policy_round`` — the
     offline scan body's own code — optionally composed with the Sec.-V
-    matcher (ranked by the policy's UCB ``channel_scores``, the stochastic-
-    regime routing; serve requests carry no scenario metadata).
+    matcher.  ``score_kind`` routes the matcher's channel-ranking source
+    exactly like ``repro.core.matching.matcher_scores``: ``"ucb"`` uses the
+    policy's native ``channel_scores`` (Eq. 30), ``"mean"`` its historical
+    ``mean_scores`` (Eq. 31) when the policy provides them.
     """
     matcher = AdaptiveMatcher(matcher_beta)
 
-    def one(row: TenantSlots, r_vec, key, contrib):
+    def scores_of(sstate, t):
+        if score_kind == "mean":
+            fn = getattr(scheduler, "mean_scores", None)
+            if fn is not None:
+                return fn(sstate, t)
+        return scheduler.channel_scores(sstate, t)
+
+    def one(row: TenantSlots, r_vec, key, contrib, aoi_in, aoi_set):
         # the request key is the tenant's round key; the env half of the
         # split belongs to whoever realized r_vec (offline_round_stream
         # mirrors the offline simulator's derivation exactly)
         _, k_sel = jax.random.split(key)
+        row_aoi = jnp.where(aoi_set, aoi_in, row.aoi)
         if use_matching:
             channels, aux = scheduler.select(row.sched_state, row.t, k_sel,
-                                             row.aoi)
-            scores = scheduler.channel_scores(row.sched_state, row.t)
+                                             row_aoi)
+            scores = scores_of(row.sched_state, row.t)
             assignment, mstate = matcher.match(
-                row.matcher_state, channels, scores, contrib, row.aoi)
+                row.matcher_state, channels, scores, contrib, row_aoi)
             rewards = r_vec[assignment]
             sstate = scheduler.update(row.sched_state, row.t, assignment,
                                       rewards, aux)
-            aoi = update_aoi(row.aoi, rewards > 0.5)
+            aoi = update_aoi(row_aoi, rewards > 0.5)
         else:
             sstate, aoi, assignment, rewards = policy_round(
-                scheduler, row.sched_state, row.aoi, row.t, k_sel, r_vec)
+                scheduler, row.sched_state, row_aoi, row.t, k_sel, r_vec)
             mstate = row.matcher_state
         new_row = TenantSlots(
             sched_state=sstate,
@@ -179,10 +291,12 @@ def make_serve_step(scheduler, use_matching: bool = False,
         )
         return new_row, assignment
 
-    def serve_step(state: TenantSlots, slots, rewards, keys, contrib, mask):
+    def serve_step(state: TenantSlots, slots, rewards, keys, contrib,
+                   aoi, aoi_set, mask):
         sub = jax.tree_util.tree_map(lambda x: x[slots], state)
         live = mask & sub.active
-        new_rows, assignment = jax.vmap(one)(sub, rewards, keys, contrib)
+        new_rows, assignment = jax.vmap(one)(sub, rewards, keys, contrib,
+                                             aoi, aoi_set)
 
         def merge(new, old):
             m = live.reshape(live.shape + (1,) * (new.ndim - 1))
@@ -196,7 +310,7 @@ def make_serve_step(scheduler, use_matching: bool = False,
         out = jax.tree_util.tree_map(
             lambda s, v: s.at[slots].set(v), state, merged)
         assignment = jnp.where(live[:, None], assignment, -1)
-        return out, assignment
+        return out, assignment, merged.matcher_state
 
     return serve_step
 
@@ -251,67 +365,140 @@ def offline_round_stream(env, key, horizon: int):
 class SchedServer:
     """Online scheduling service over a fixed-capacity tenant pool.
 
-    Exactly two programs are compiled per (policy family, capacity, slots)
-    configuration — the batched serve step and the admit program — both AOT
-    through the sweep driver's process-level executable cache, so a second
-    server with the same shape (or any amount of tenant churn) compiles
-    nothing.  The step's tenant-state operand is donated: per-step state
-    updates are in-place on accelerators.
+    Two programs are compiled per (policy family, shape) configuration —
+    the batched serve step and the admit program — both AOT through the
+    sweep driver's process-level executable cache, so a second server with
+    the same shape (or any amount of tenant churn) compiles nothing.
+    ``warm()`` optionally precompiles the autosizing ladder (one step
+    executable per batch size ≤ ``slots``) so ``serve_stream`` resizes
+    between cached executables.  The step's tenant-state operand is
+    donated: per-step state updates are in-place on backends with donation.
 
     ``serve(requests)`` batches requests into fixed-size steps (padding
     short batches with scratch-slot rows, deferring same-tenant duplicates
     to the next step) and returns each request's (M,) channel assignment in
-    request order.
+    request order, synchronizing on every step.  ``serve_stream(requests)``
+    is the pipelined double-buffered loop (results lag dispatch by one
+    step); ``serve_decisions(requests)`` additionally returns the post-step
+    matcher rows (the FL trainers' protocol).
+
+    ``shard=True`` places the tenant-slot state over the 1-D "cases" device
+    mesh (identity — bitwise — on one device), scaling ``capacity`` to
+    10^4–10^5; host bookkeeping is O(1) per join/leave at any capacity.
     """
 
     def __init__(self, scheduler, capacity: int = 256, slots: int = 16,
                  use_matching: bool = False, matcher_beta: float = 0.5,
-                 donate: bool = True):
+                 donate: bool = True, score_kind: str = "ucb",
+                 shard: bool = False, mesh=None):
         if capacity < 1:
             raise ValueError(f"SchedServer: capacity must be >= 1, got {capacity}")
         if slots < 1:
             raise ValueError(f"SchedServer: slots must be >= 1, got {slots}")
+        if score_kind not in ("ucb", "mean"):
+            raise ValueError(f"SchedServer: score_kind must be 'ucb' or "
+                             f"'mean', got {score_kind!r}")
         self.scheduler = scheduler
         self.capacity = capacity
         self.slots = slots
         self.use_matching = use_matching
         self.matcher_beta = matcher_beta
-        self._state = init_slots(scheduler, capacity, matcher_beta)
+        self.score_kind = score_kind
+        self.shard = bool(shard)
+        self._donate = bool(donate)
+        if self.shard:
+            self._mesh = sweep_mesh() if mesh is None else mesh
+            d = int(self._mesh.devices.size)
+            # round the slot axis up to the mesh: rows capacity+1 .. rows-1
+            # are extra never-read scratch, so every leaf partitions evenly
+            self.rows = -(-(capacity + 1) // d) * d
+        else:
+            self._mesh = None
+            self.rows = capacity + 1
+        self._state = init_slots(scheduler, capacity, matcher_beta,
+                                 rows=self.rows)
+        if self.shard:
+            self._state = shard_slots(self._state, self._mesh)
         self._tenants: Dict[Any, int] = {}
-        self._free = list(range(capacity))[::-1]      # pop() yields slot 0 first
+        self._free = _FreePool(capacity)
         self._hp_defaults = dict(getattr(scheduler, "params", dict)())
         self._served = 0
         self._steps = 0
+        self._stream_steps = 0
+        self._rows_dispatched = 0
+        self._sizes_used: Dict[int, int] = {}
 
-        sig = _sched_sig(scheduler)
-        backend = jax.default_backend()
-        n, m = scheduler.n_channels, scheduler.n_clients
-        donate_idx = (0,) if donate else ()
-        step_fn = make_serve_step(scheduler, use_matching=use_matching,
-                                  matcher_beta=matcher_beta)
-        step_ex = (self._state,
-                   jnp.zeros((slots,), jnp.int32),
-                   jnp.zeros((slots, n), jnp.float32),
-                   jnp.zeros((slots, 2), jnp.uint32),
-                   jnp.ones((slots, m), jnp.float32),
-                   jnp.zeros((slots,), bool))
-        self._step, step_compile_s, step_hit = cached_compile(
-            ("serve_step", sig, capacity, slots, use_matching,
-             float(matcher_beta), bool(donate), backend),
-            lambda: jax.jit(step_fn, donate_argnums=donate_idx).lower(*step_ex))
+        self._sig = _sched_sig(scheduler)
+        self._backend = jax.default_backend()
+        self._step_fn = make_serve_step(scheduler, use_matching=use_matching,
+                                        matcher_beta=matcher_beta,
+                                        score_kind=score_kind)
+        # batch-size ladder for serve_stream autosizing: powers of two up
+        # to `slots` (plus `slots` itself) — each size is its own AOT-cached
+        # executable, so resizing between them never recompiles after warmup
+        self._ladder = sorted({1 << i for i in range(slots.bit_length())
+                               if (1 << i) <= slots} | {slots})
+        self.compile_s = 0.0
+        self.compiles = 0
+        self._step_cache: Dict[int, Any] = {}
+        self._templates: Dict[int, Tuple] = {}
+        self._step = self._get_step(slots)
 
         admit_fn = make_admit(scheduler, matcher_beta=matcher_beta)
+        donate_idx = (0,) if self._donate else ()
         admit_ex = (self._state, jnp.zeros((), jnp.int32),
                     jnp.zeros((2,), jnp.uint32),
                     {k: jnp.asarray(v, jnp.float32)
                      for k, v in self._hp_defaults.items()},
                     jnp.zeros((), bool))
         self._admit, admit_compile_s, admit_hit = cached_compile(
-            ("serve_admit", sig, capacity, float(matcher_beta),
-             tuple(sorted(self._hp_defaults)), bool(donate), backend),
+            ("serve_admit", self._sig, capacity, self.rows,
+             float(matcher_beta), tuple(sorted(self._hp_defaults)),
+             self._donate, self._backend, self._mesh),
             lambda: jax.jit(admit_fn, donate_argnums=donate_idx).lower(*admit_ex))
-        self.compile_s = step_compile_s + admit_compile_s
-        self.compiles = int(not step_hit) + int(not admit_hit)
+        self.compile_s += admit_compile_s
+        self.compiles += int(not admit_hit)
+
+    # ------------------------------------------------------------- compile
+    def _get_step(self, b: int):
+        """The serve-step executable for batch size ``b`` (AOT-cached)."""
+        fn = self._step_cache.get(b)
+        if fn is not None:
+            return fn
+        n, m = self.scheduler.n_channels, self.scheduler.n_clients
+        donate_idx = (0,) if self._donate else ()
+        step_ex = (self._state,
+                   jnp.zeros((b,), jnp.int32),
+                   jnp.zeros((b, n), jnp.float32),
+                   jnp.zeros((b, 2), jnp.uint32),
+                   jnp.ones((b, m), jnp.float32),
+                   jnp.zeros((b, m), jnp.float32),
+                   jnp.zeros((b,), bool),
+                   jnp.zeros((b,), bool))
+        fn, compile_s, hit = cached_compile(
+            ("serve_step", self._sig, self.capacity, self.rows, b,
+             self.use_matching, float(self.matcher_beta), self.score_kind,
+             self._donate, self._backend, self._mesh),
+            lambda: jax.jit(self._step_fn,
+                            donate_argnums=donate_idx).lower(*step_ex))
+        self._step_cache[b] = fn
+        self.compile_s += compile_s
+        self.compiles += int(not hit)
+        return fn
+
+    def warm(self, sizes: Optional[Sequence[int]] = None) -> None:
+        """Precompile step executables for ``sizes`` (default: the whole
+        autosizing ladder) so a later ``serve_stream`` resizes without ever
+        missing the executable cache."""
+        for b in (self._ladder if sizes is None else sizes):
+            self._get_step(int(b))
+
+    def _pick_size(self, depth: int) -> int:
+        """Smallest ladder batch size covering ``depth`` queued requests."""
+        for b in self._ladder:
+            if b >= depth:
+                return b
+        return self.slots
 
     # -------------------------------------------------------------- tenants
     def join(self, tenant, key=None, hp: Optional[Dict[str, Any]] = None) -> int:
@@ -322,9 +509,11 @@ class SchedServer:
         """
         if tenant in self._tenants:
             raise ValueError(f"SchedServer.join: tenant {tenant!r} already live")
-        if not self._free:
+        if not len(self._free):
             raise RuntimeError(
-                f"SchedServer.join: at capacity ({self.capacity} tenants)")
+                f"SchedServer.join: at capacity ({self.capacity} tenants "
+                f"live) — leave() an existing tenant or construct the "
+                f"server with a larger capacity")
         overrides = dict(hp or {})
         unknown = set(overrides) - set(self._hp_defaults)
         if unknown:
@@ -355,7 +544,7 @@ class SchedServer:
             {k: jnp.asarray(v, jnp.float32)
              for k, v in self._hp_defaults.items()},
             jnp.asarray(False))
-        self._free.append(slot)
+        self._free.push(slot)
 
     @property
     def tenants(self) -> Dict[Any, int]:
@@ -368,6 +557,127 @@ class SchedServer:
         return jax.tree_util.tree_map(lambda x: x[slot], self._state)
 
     # -------------------------------------------------------------- serving
+    def _take_batch(self, pending: deque, limit: int):
+        """Pop up to ``limit`` unique-tenant requests off ``pending``
+        (deferring same-tenant duplicates back to the FRONT, in order) —
+        the packing rule both serve() and serve_stream() share, so their
+        step decomposition of a request trace is identical."""
+        batch = []
+        used = set()
+        deferred = []
+        while pending and len(batch) < limit:
+            i, rq = pending.popleft()
+            slot = self._tenants.get(rq.tenant)
+            if slot is None:
+                raise KeyError(f"SchedServer.serve: unknown tenant "
+                               f"{rq.tenant!r}")
+            if slot in used:
+                deferred.append((i, rq))
+                continue
+            used.add(slot)
+            batch.append((i, rq, slot))
+        pending.extendleft(reversed(deferred))
+        return batch
+
+    def _pack(self, batch, b: int):
+        """Vectorized host packing of one step's operand arrays (size ``b``).
+
+        Immutable all-default operands (uniform contrib, no AoI override,
+        full-live mask) come from per-size cached templates — never mutated,
+        so reusing them across steps is safe even under zero-copy
+        device transfer."""
+        n, m = self.scheduler.n_channels, self.scheduler.n_clients
+        live = len(batch)
+        tmpl = self._templates.get(b)
+        if tmpl is None:
+            tmpl = (np.ones((b, m), np.float32),
+                    np.zeros((b, m), np.float32),
+                    np.zeros((b,), bool),
+                    np.ones((b,), bool))
+            self._templates[b] = tmpl
+        contrib_t, aoi_t, aoi_unset_t, mask_live_t = tmpl
+
+        slots = np.full((b,), self.capacity, np.int32)
+        slots[:live] = [s for (_, _, s) in batch]
+        rewards = np.zeros((b, n), np.float32)
+        rewards[:live] = [rq.rewards for (_, rq, _) in batch]
+        keys = np.zeros((b, 2), np.uint32)
+        keys[:live] = [rq.key for (_, rq, _) in batch]
+
+        if any(rq.contrib is not None for (_, rq, _) in batch):
+            contrib = contrib_t.copy()
+            for j, (_, rq, _) in enumerate(batch):
+                if rq.contrib is not None:
+                    contrib[j] = rq.contrib
+        else:
+            contrib = contrib_t
+        if any(rq.aoi is not None for (_, rq, _) in batch):
+            aoi = aoi_t.copy()
+            aoi_set = aoi_unset_t.copy()
+            for j, (_, rq, _) in enumerate(batch):
+                if rq.aoi is not None:
+                    aoi[j] = rq.aoi
+                    aoi_set[j] = True
+        else:
+            aoi, aoi_set = aoi_t, aoi_unset_t
+        if live == b:
+            mask = mask_live_t
+        else:
+            mask = np.zeros((b,), bool)
+            mask[:live] = True
+        return slots, rewards, keys, contrib, aoi, aoi_set, mask
+
+    def _serve_sync(self, requests: Sequence[ServeRequest],
+                    want_decisions: bool):
+        """The synchronous serving loop: pack, step, SYNC on the assignment,
+        repeat — the legacy per-step-blocking baseline ``serve_stream``'s
+        pipelining is measured against."""
+        n, m = self.scheduler.n_channels, self.scheduler.n_clients
+        out: List[Optional[np.ndarray]] = [None] * len(requests)
+        decs: List[Optional[ServeDecision]] = [None] * len(requests)
+        pending = deque(enumerate(requests))
+        while pending:
+            batch = self._take_batch(pending, self.slots)
+
+            slots = np.full((self.slots,), self.capacity, np.int32)
+            rewards = np.zeros((self.slots, n), np.float32)
+            keys = np.zeros((self.slots, 2), np.uint32)
+            contrib = np.ones((self.slots, m), np.float32)
+            aoi = np.zeros((self.slots, m), np.float32)
+            aoi_set = np.zeros((self.slots,), bool)
+            mask = np.zeros((self.slots,), bool)
+            for j, (i, rq, slot) in enumerate(batch):
+                slots[j] = slot
+                rewards[j] = np.asarray(rq.rewards, np.float32)
+                keys[j] = np.asarray(rq.key, np.uint32)
+                if rq.contrib is not None:
+                    contrib[j] = np.asarray(rq.contrib, np.float32)
+                if rq.aoi is not None:
+                    aoi[j] = np.asarray(rq.aoi, np.float32)
+                    aoi_set[j] = True
+                mask[j] = True
+            self._state, assignment, mstate = self._step(
+                self._state, jnp.asarray(slots), jnp.asarray(rewards),
+                jnp.asarray(keys), jnp.asarray(contrib), jnp.asarray(aoi),
+                jnp.asarray(aoi_set), jnp.asarray(mask))
+            assignment = np.asarray(assignment)   # the decision must retire
+            if want_decisions:
+                mrows = jax.tree_util.tree_map(np.asarray, mstate)
+                for j, (i, rq, slot) in enumerate(batch):
+                    decs[i] = ServeDecision(
+                        assignment=assignment[j],
+                        matcher_state=MatcherState(
+                            v_max=mrows.v_max[j], a_max=mrows.a_max[j],
+                            beta_t=mrows.beta_t[j]))
+            for j, (i, rq, slot) in enumerate(batch):
+                out[i] = assignment[j]
+            self._served += len(batch)
+            self._steps += 1
+            self._rows_dispatched += self.slots
+            self._sizes_used[self.slots] = \
+                self._sizes_used.get(self.slots, 0) + 1
+        return out, decs
+
     def serve(self, requests: Sequence[ServeRequest]) -> List[np.ndarray]:
         """Serve a batch of requests; returns each request's (M,) channel
         assignment, in request order.
@@ -376,52 +686,97 @@ class SchedServer:
         a tenant already in the current step is deferred to the next one
         (live scatter rows must be unique), and short final steps are padded
         with masked scratch-slot rows — the step shape, and therefore the
-        executable, never changes.
+        executable, never changes.  Synchronous: each step's assignment is
+        converted to ``np.ndarray`` (a device sync) before the next step is
+        packed; see ``serve_stream`` for the pipelined loop.
         """
-        n, m = self.scheduler.n_channels, self.scheduler.n_clients
-        out: List[Optional[np.ndarray]] = [None] * len(requests)
-        pending = deque(enumerate(requests))
-        while pending:
-            batch = []
-            used = set()
-            deferred = []
-            while pending and len(batch) < self.slots:
-                i, rq = pending.popleft()
-                slot = self._tenants.get(rq.tenant)
-                if slot is None:
-                    raise KeyError(f"SchedServer.serve: unknown tenant "
-                                   f"{rq.tenant!r}")
-                if slot in used:
-                    deferred.append((i, rq))
-                    continue
-                used.add(slot)
-                batch.append((i, rq, slot))
-            pending.extendleft(reversed(deferred))
+        return self._serve_sync(requests, want_decisions=False)[0]
 
-            slots = np.full((self.slots,), self.capacity, np.int32)
-            rewards = np.zeros((self.slots, n), np.float32)
-            keys = np.zeros((self.slots, 2), np.uint32)
-            contrib = np.ones((self.slots, m), np.float32)
-            mask = np.zeros((self.slots,), bool)
-            for j, (i, rq, slot) in enumerate(batch):
-                slots[j] = slot
-                rewards[j] = np.asarray(rq.rewards, np.float32)
-                keys[j] = np.asarray(rq.key, np.uint32)
-                if rq.contrib is not None:
-                    contrib[j] = np.asarray(rq.contrib, np.float32)
-                mask[j] = True
-            self._state, assignment = self._step(
-                self._state, jnp.asarray(slots), jnp.asarray(rewards),
-                jnp.asarray(keys), jnp.asarray(contrib), jnp.asarray(mask))
-            assignment = np.asarray(assignment)   # the decision must retire
-            for j, (i, rq, slot) in enumerate(batch):
-                out[i] = assignment[j]
-            self._served += len(batch)
-            self._steps += 1
-        return out    # type: ignore[return-value]
+    def serve_decisions(
+            self, requests: Sequence[ServeRequest]) -> List[ServeDecision]:
+        """``serve()`` returning full ``ServeDecision``s (assignment + the
+        post-step matcher row) — the FL trainers' consumption protocol."""
+        return self._serve_sync(requests, want_decisions=True)[1]
+
+    def serve_stream(self, requests: Iterable[Optional[ServeRequest]],
+                     autosize: bool = True) -> Iterator[Tuple[int, np.ndarray]]:
+        """Pipelined serving: a generator yielding ``(index, assignment)``.
+
+        ``requests`` is any iterable of ``ServeRequest`` — including a lazy
+        generator whose side effects (``join``/``leave`` churn) interleave
+        with serving — optionally punctuated by ``None`` flush markers that
+        dispatch whatever is pending without waiting for a full batch.
+        ``index`` is the request's position in the stream (flush markers
+        don't count); assignments are bitwise identical to the synchronous
+        ``serve()`` loop over the same trace.
+
+        Double-buffered, ONE STEP of latency: while step k runs on device,
+        the host packs and dispatches step k+1, and only then converts step
+        k's assignment to host memory — request batching and result
+        conversion overlap the in-flight device step instead of blocking on
+        it.  With ``autosize=True`` the slot batch grows/shrinks with the
+        observed queue depth, moving between the AOT-cached ladder
+        executables (``warm()`` precompiles them; resizing after warmup
+        costs zero recompiles).
+        """
+        pending: deque = deque()
+        inflight: Optional[Tuple[List[int], Any]] = None
+        it = iter(requests)
+        exhausted = False
+        draining = False
+        next_index = 0
+        while True:
+            # ---- pull from the source until a full batch / flush / end ----
+            while not exhausted and not draining and len(pending) < self.slots:
+                try:
+                    rq = next(it)
+                except StopIteration:
+                    exhausted = True
+                    draining = True
+                    break
+                if rq is None:
+                    draining = True
+                    break
+                pending.append((next_index, rq))
+                next_index += 1
+
+            # ---- dispatch the next step (device work starts now) ----------
+            dispatched = None
+            if pending and (draining or len(pending) >= self.slots):
+                depth = len(pending)
+                b = self._pick_size(min(depth, self.slots)) if autosize \
+                    else self.slots
+                batch = self._take_batch(pending, b)
+                args = self._pack(batch, b)
+                step = self._get_step(b)
+                self._state, assignment, _ = step(self._state, *args)
+                dispatched = ([i for (i, _, _) in batch], assignment)
+                self._served += len(batch)
+                self._steps += 1
+                self._stream_steps += 1
+                self._rows_dispatched += b
+                self._sizes_used[b] = self._sizes_used.get(b, 0) + 1
+            if draining and not pending and not exhausted:
+                draining = False          # flush satisfied; resume pulling
+
+            # ---- retire the PREVIOUS step while this one is in flight -----
+            if inflight is not None:
+                idxs, asg = inflight
+                host = np.asarray(asg)
+                for j, i in enumerate(idxs):
+                    yield i, host[j]
+            inflight = dispatched
+            if inflight is None and not pending and exhausted:
+                return
 
     def stats(self) -> Dict[str, Any]:
+        rows = max(self._rows_dispatched, 1)
         return {"tenants": len(self._tenants), "capacity": self.capacity,
-                "slots": self.slots, "served": self._served,
-                "steps": self._steps, "compiles": self.compiles,
-                "compile_s": self.compile_s}
+                "rows": self.rows, "slots": self.slots,
+                "served": self._served, "steps": self._steps,
+                "stream_steps": self._stream_steps,
+                "rows_dispatched": self._rows_dispatched,
+                "batch_occupancy": self._served / rows,
+                "sizes_used": dict(self._sizes_used),
+                "sharded": self.shard,
+                "compiles": self.compiles, "compile_s": self.compile_s}

@@ -95,6 +95,26 @@ def shard_clients(tree, mesh: Optional[Mesh] = None):
         lambda x: jax.device_put(x, sharding), tree)
 
 
+def shard_slots(tree, mesh: Optional[Mesh] = None):
+    """Place tenant-slot arrays (leading axis = slot rows) over the mesh.
+
+    The serving tier's ``TenantSlots`` leaves all lead with the slot axis
+    (``rows``, mesh-divisible — ``SchedServer`` pads with extra scratch
+    rows), and the serve step is gather / per-row compute / scatter on slot
+    indices, so the tenant axis partitions exactly like the sparse FL
+    client axis above: a ``NamedSharding`` over the same 1-D "cases" mesh
+    splits the O(capacity) state residency and per-row math across devices
+    with no cross-device traffic beyond the (slots,) gathers.  On a single
+    device this is the identity placement — serving results are bitwise
+    unchanged (asserted in ``tests/test_serve_scale.py``, which CI also
+    runs under a forced 4-device CPU mesh).
+    """
+    mesh = sweep_mesh() if mesh is None else mesh
+    sharding = jax.sharding.NamedSharding(mesh, P(_AXIS))
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree)
+
+
 _FN_CACHE: dict = {}
 
 

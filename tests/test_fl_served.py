@@ -1,0 +1,193 @@
+"""FL trainers consuming schedules from a ``SchedServer`` (``run_served``).
+
+The load-bearing guarantee of the serving-tier PR's end-to-end wiring: a
+trainer that posts its realized channel vector, round key, contributions
+and AoI to a ``SchedServer`` and finishes the round with the returned
+assignment + matcher row reproduces its standalone ``run()`` **bitwise** —
+every state leaf (the trainer's ``sched_state`` excepted: the policy state
+lives in the server's tenant row, which must itself match the standalone
+final state bitwise) and every metric.  Holds for the dense
+``AsyncFLTrainer``, the sparse ``SparseAsyncFLTrainer`` at M < N, and two
+tenants sharing one server without perturbing each other.  Plus the
+``_validate_server`` guard rails for mismatched server configurations.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandits import GLRCUCB
+from repro.core.channels import make_scenario
+from repro.fl import (
+    AsyncFLConfig,
+    AsyncFLTrainer,
+    SparseFLConfig,
+    SparseAsyncFLTrainer,
+)
+from repro.sim import SchedServer
+
+KEY = jax.random.PRNGKey(0)
+D, NEX, B, E = 4, 12, 3, 2
+
+
+def _loss(p, x, y):
+    return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+
+def _params():
+    return {"w": jnp.zeros((D,), jnp.float32),
+            "b": jnp.zeros((), jnp.float32)}
+
+
+def _client_data(n, seed=0):
+    rng = np.random.default_rng(seed)
+    cx = jnp.asarray(rng.normal(size=(n, NEX, D)).astype(np.float32))
+    cy = jnp.asarray(rng.normal(size=(n, NEX)).astype(np.float32))
+    return cx, cy
+
+
+def _dense_batches(m, r, seed=1):
+    rng = np.random.default_rng(seed)
+    bx = jnp.asarray(rng.normal(size=(r, m, E, B, D)).astype(np.float32))
+    by = jnp.asarray(rng.normal(size=(r, m, E, B)).astype(np.float32))
+    return bx, by
+
+
+def _assert_bitwise(ref_state, srv_state, ref_m, srv_m, server, tenant,
+                    skip=("sched_state",)):
+    for name in ref_state._fields:
+        if name in skip:
+            continue
+        for la, lb in zip(jax.tree_util.tree_leaves(getattr(ref_state, name)),
+                          jax.tree_util.tree_leaves(getattr(srv_state, name))):
+            np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                          err_msg=f"leaf of {name}")
+    # the policy state lives server-side: its tenant row must equal the
+    # standalone trainer's final sched_state bitwise
+    row = server.tenant_state(tenant).sched_state
+    for la, lb in zip(jax.tree_util.tree_leaves(ref_state.sched_state),
+                      jax.tree_util.tree_leaves(row)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg="server-side sched_state")
+    for k in ref_m:
+        np.testing.assert_array_equal(np.asarray(ref_m[k]),
+                                      np.asarray(srv_m[k]),
+                                      err_msg=f"metric {k}")
+
+
+def _mk_dense(m=5, nch=8, r=12, seed_tag=77, **cfg_kw):
+    sched = GLRCUCB(nch, m, history=32)
+    proc = make_scenario("piecewise", n_channels=nch, horizon=r,
+                         n_breakpoints=2)
+    cfg = AsyncFLConfig(n_clients=m, n_channels=nch, local_epochs=E,
+                        staleness_cap=3, max_update_norm=50.0, **cfg_kw)
+    return AsyncFLTrainer(cfg, sched, proc, _loss,
+                          realize_key=jax.random.fold_in(KEY, seed_tag))
+
+
+def _mk_sparse(n=10, m=4, nch=8, r=12, seed_tag=77, **cfg_kw):
+    sched = GLRCUCB(nch, m, history=32)
+    proc = make_scenario("piecewise", n_channels=nch, horizon=r,
+                         n_breakpoints=2)
+    cfg = SparseFLConfig(n_clients=n, n_sched=m, n_channels=nch,
+                         batch_size=B, local_epochs=E, staleness_cap=3,
+                         max_update_norm=50.0, **cfg_kw)
+    return SparseAsyncFLTrainer(cfg, sched, proc, _loss,
+                                realize_key=jax.random.fold_in(KEY, seed_tag))
+
+
+def _server_for(trainer, m, **kw):
+    cfg = dict(capacity=4, slots=2, use_matching=True,
+               matcher_beta=trainer.cfg.matcher_beta)
+    cfg.update(kw)
+    return SchedServer(trainer.scheduler, **cfg)
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: served trainer == standalone run()
+# ---------------------------------------------------------------------------
+
+def test_dense_run_served_matches_run_bitwise():
+    r, m = 12, 5
+    tr = _mk_dense(m=m, r=r)
+    bx, by = _dense_batches(m, r)
+    keys = jax.random.split(jax.random.PRNGKey(9), r)
+
+    ref_s, ref_m = tr.run(tr.init(_params(), KEY), bx, by, keys)
+
+    server = _server_for(tr, m)
+    server.join("job", key=KEY)
+    srv_s, srv_m = tr.run_served(tr.init(_params(), KEY), bx, by, keys,
+                                 server, "job")
+    _assert_bitwise(ref_s, srv_s, ref_m, srv_m, server, "job")
+
+
+def test_sparse_run_served_matches_run_bitwise():
+    n, m, r = 10, 4, 12
+    tr = _mk_sparse(n=n, m=m, r=r)
+    cx, cy = _client_data(n)
+    keys = jax.random.split(jax.random.PRNGKey(9), r)
+
+    ref_s, ref_m = tr.run(tr.init(_params(), KEY), cx, cy, keys)
+
+    server = _server_for(tr, m)
+    server.join("job", key=KEY)
+    srv_s, srv_m = tr.run_served(tr.init(_params(), KEY), cx, cy, keys,
+                                 server, "job")
+    _assert_bitwise(ref_s, srv_s, ref_m, srv_m, server, "job")
+
+
+def test_two_tenants_share_a_server_without_crosstalk():
+    """Interleaved rounds from two jobs on one server: each reproduces its
+    standalone trajectory bitwise — a tenant's policy state is invisible
+    to its neighbours (the multi-tenant isolation contract, end to end)."""
+    r, m = 10, 5
+    tr_a = _mk_dense(m=m, r=r, seed_tag=77)
+    tr_b = _mk_dense(m=m, r=r, seed_tag=78)
+    bx_a, by_a = _dense_batches(m, r, seed=1)
+    bx_b, by_b = _dense_batches(m, r, seed=2)
+    keys_a = jax.random.split(jax.random.PRNGKey(9), r)
+    keys_b = jax.random.split(jax.random.PRNGKey(10), r)
+
+    ref_a = tr_a.run(tr_a.init(_params(), KEY), bx_a, by_a, keys_a)
+    ref_b = tr_b.run(tr_b.init(_params(), jax.random.fold_in(KEY, 1)),
+                     bx_b, by_b, keys_b)
+
+    server = _server_for(tr_a, m)
+    server.join("a", key=KEY)
+    server.join("b", key=jax.random.fold_in(KEY, 1))
+    # interleave: one round of a, one of b, round by round
+    srv_a = tr_a.run_served(tr_a.init(_params(), KEY), bx_a, by_a, keys_a,
+                            server, "a")
+    srv_b = tr_b.run_served(tr_b.init(_params(), jax.random.fold_in(KEY, 1)),
+                            bx_b, by_b, keys_b, server, "b")
+    _assert_bitwise(ref_a[0], srv_a[0], ref_a[1], srv_a[1], server, "a")
+    _assert_bitwise(ref_b[0], srv_b[0], ref_b[1], srv_b[1], server, "b")
+
+
+# ---------------------------------------------------------------------------
+# validation guard rails
+# ---------------------------------------------------------------------------
+
+def test_run_served_rejects_mismatched_server():
+    r, m = 2, 5
+    tr = _mk_dense(m=m, r=12)       # 12-round env horizon; run only 2
+    bx, by = _dense_batches(m, r)
+    keys = jax.random.split(jax.random.PRNGKey(9), r)
+    state = tr.init(_params(), KEY)
+
+    def served(server):
+        server.join("job", key=KEY)
+        return tr.run_served(state, bx, by, keys, server, "job")
+
+    with pytest.raises(ValueError, match="use_matching"):
+        served(_server_for(tr, m, use_matching=False))
+    with pytest.raises(ValueError, match="matcher_beta"):
+        served(_server_for(tr, m, matcher_beta=0.25))
+    with pytest.raises(ValueError, match="dims"):
+        bad = SchedServer(GLRCUCB(tr.cfg.n_channels, m + 1, history=32),
+                          capacity=4, slots=2, use_matching=True)
+        bad.join("job", key=KEY)
+        tr.run_served(state, bx, by, keys, bad, "job")
+    with pytest.raises(ValueError, match="score_kind"):
+        served(_server_for(tr, m, score_kind="mean"))
