@@ -1028,10 +1028,26 @@ def chaos_suite():
     FL half: a 20% NaN-gradient ``FaultProcess`` through the async trainer
     — the quarantined run must stay finite end to end (params, losses)
     while the unguarded baseline diverges; a 2**24 byte-flip run must stay
-    on the data scale only when ``max_update_norm`` is set."""
+    on the data scale only when ``max_update_norm`` is set.
+
+    v2 (Byzantine half): the attack x defense matrix — ``sign_flip`` and
+    ``inner_product`` at 20% Byzantine against every registered aggregator
+    — runs as vmapped sweep buckets (seeds stack per cell); the containment
+    bits assert that ``mean`` measurably degrades under both attacks while
+    at least one robust aggregator holds the final eval loss near clean,
+    that the explicit ``MeanAgg`` + no-fault path is bitwise-identical to
+    the legacy default trainer, that a 2-config burst-schedule grid runs as
+    <= 2 buckets with batch-of-1 bitwise parity against the serial trainer,
+    and that a ``SchedServer`` killed mid-``serve_stream`` and restored
+    from its snapshot emits the uninterrupted run's exact assignments."""
+    import tempfile
+
+    from repro.core.aggregation import make_aggregator
     from repro.core.channels import make_scenario
     from repro.core.faults import make_fault
     from repro.fl import AsyncFLConfig, AsyncFLTrainer
+    from repro.sim import SchedServer, ServeRequest
+    from repro.sim.sweep import FLSweepCase
     from repro.utils.tree import tree_flatten_concat
 
     t_sim, n, m = (400, 8, 3) if QUICK else (4000, 8, 3)
@@ -1119,6 +1135,181 @@ def chaos_suite():
                          and float(jnp.abs(w_c).max()) < 1e3)
     row("chaos/fl-byte-flip-capped", 0.0, f"norm_cap_held={norm_cap_held}")
 
+    # --- v2: Byzantine attack x robust-aggregation matrix -------------------
+    # every cell (attack x defense) runs its seeds as ONE vmapped sweep
+    # bucket; containment is judged on the final params' loss over a
+    # held-out batch, against the clean (no-fault, default-mean) run.  The
+    # matrix keeps its own 40-round horizon in BOTH modes (the model is a
+    # 12-dim linear problem — the cost is negligible) so the quick-mode CI
+    # regen reproduces the committed full-mode containment numbers exactly.
+    byz_rounds = 40
+    bxz = jax.random.normal(jax.random.fold_in(KEY, 31),
+                            (byz_rounds, m_fl, 1, 4, d))
+    byy = jnp.sum(bxz, -1) * 0.3
+    ex = jax.random.normal(jax.random.fold_in(KEY, 33), (256, d))
+    ey = jnp.sum(ex, -1) * 0.3
+
+    def eval_loss(p) -> float:
+        return float(loss_fn(p, ex, ey))
+
+    def mk_trainer(faults, aggregator):
+        return AsyncFLTrainer(
+            cfg=AsyncFLConfig(n_clients=m_fl, n_channels=n_fl),
+            scheduler=GLRCUCB(n_fl, m_fl, history=64), env=env_fl,
+            loss_fn=loss_fn, faults=faults, aggregator=aggregator)
+
+    attacks = {
+        "sign_flip": make_fault("sign_flip", rate=0.2, scale=8.0),
+        "inner_product": make_fault("inner_product", rate=0.2, strength=8.0),
+    }
+    defenses = {
+        "mean": None,
+        "trimmed_mean": make_aggregator("trimmed_mean", trim_frac=0.34),
+        "coordinate_median": make_aggregator("coordinate_median"),
+        "norm_clip": make_aggregator("norm_clip", clip_norm=1.0),
+    }
+    seeds = 2
+    cells = [("clean", mk_trainer(None, None))] + [
+        (f"{a}+{dname}", mk_trainer(fault, dfn))
+        for a, fault in attacks.items() for dname, dfn in defenses.items()]
+    byz_cases = [
+        FLSweepCase(f"byz/{name}/s{s}", tr_, params0,
+                    jax.random.fold_in(KEY, 700 + s), bxz, byy,
+                    jax.random.split(jax.random.fold_in(KEY, 710 + s),
+                                     byz_rounds))
+        for name, tr_ in cells for s in range(seeds)]
+    byz_res, byz_report = sweep(byz_cases, collect_curve=False, block=True)
+    losses = {}
+    for name, _ in cells:
+        v = float(np.mean([
+            eval_loss(byz_res[f"byz/{name}/s{s}"]["state"].params)
+            for s in range(seeds)]))
+        losses[name] = v
+        row(f"chaos/byz/{name}", 0.0,
+            f"eval_loss={v:.4f};seeds={seeds}")
+
+    clean_l = losses["clean"]
+    robust_names = ("trimmed_mean", "coordinate_median", "norm_clip")
+    # `mean` must measurably degrade under EVERY attack (>= 3x the clean
+    # eval loss); a defense "contains" an attack when it absorbs >= 70% of
+    # that degradation (excess loss over clean at most 0.3x the mean
+    # path's).  The expected shape of the record: trimmed_mean and
+    # coordinate_median contain sign_flip (far-out-of-range rows trim
+    # away) but NOT the ALIE-style inner_product, whose colluding rows
+    # hide inside the honest per-coordinate range — norm_clip bounds its
+    # magnitude instead and contains both.
+    mean_degraded = all(
+        (not np.isfinite(losses[f"{a}+mean"]))
+        or losses[f"{a}+mean"] >= 3.0 * clean_l
+        for a in attacks)
+
+    def _contains(dname, a):
+        l, ml = losses[f"{a}+{dname}"], losses[f"{a}+mean"]
+        if not np.isfinite(l):
+            return False
+        if not np.isfinite(ml):
+            return True
+        return l - clean_l <= 0.3 * (ml - clean_l)
+
+    contained_by = {
+        dname: all(_contains(dname, a) for a in attacks)
+        for dname in robust_names}
+    byz_contained = any(contained_by.values())
+    row("chaos/byz-containment", 0.0,
+        f"mean_degraded={mean_degraded};contained="
+        + ",".join(sorted(k for k, v in contained_by.items() if v)))
+
+    # clean-path parity: explicit MeanAgg + no fault is bitwise the legacy
+    # default (aggregator=None) trainer — state leaves AND metrics
+    tr_legacy = mk_trainer(None, None)
+    tr_mean = mk_trainer(None, make_aggregator("mean"))
+    st_l, mets_l = tr_legacy.run(tr_legacy.init(params0, KEY), bx, by, rkeys)
+    st_m, mets_m = tr_mean.run(tr_mean.init(params0, KEY), bx, by, rkeys)
+    clean_agg_bitwise = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(st_l),
+                        jax.tree_util.tree_leaves(st_m))
+    ) and all(
+        np.array_equal(np.asarray(mets_l[k]), np.asarray(mets_m[k]))
+        for k in mets_l)
+    row("chaos/clean-agg-parity", 0.0, f"bitwise_match={clean_agg_bitwise}")
+
+    # --- v2: burst fault schedules (Gilbert-Elliott carry) ------------------
+    # a 2-config burst grid over the SAME base attack: two trainers, <= 2
+    # sweep buckets, and the first case re-checked bitwise against the
+    # serial trainer (schedule carry is part of the scanned state)
+    base_flip = make_fault("sign_flip", rate=0.3, scale=6.0)
+    burst_trainers = [
+        mk_trainer(make_fault("burst", base=base_flip, p_on=0.15, p_off=0.35),
+                   defenses["coordinate_median"]),
+        mk_trainer(make_fault("burst", base=base_flip, p_on=0.35, p_off=0.15),
+                   defenses["coordinate_median"]),
+    ]
+    burst_cases = [
+        FLSweepCase(f"burst/{i}", tr_, params0, jax.random.fold_in(KEY, 800),
+                    bx, by, rkeys)
+        for i, tr_ in enumerate(burst_trainers)]
+    burst_res, burst_report = sweep(burst_cases, collect_curve=False,
+                                    block=True)
+    burst_buckets = len(burst_report)
+    st_bs, mets_bs = burst_trainers[0].run(
+        burst_trainers[0].init(params0, jax.random.fold_in(KEY, 800)),
+        bx, by, rkeys)
+    sw0 = burst_res["burst/0"]
+    burst_batch1 = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(st_bs),
+                        jax.tree_util.tree_leaves(sw0["state"]))
+    ) and all(
+        np.array_equal(np.asarray(mets_bs[k]), np.asarray(sw0["metrics"][k]))
+        for k in mets_bs)
+    burst_finite = all(
+        bool(jnp.isfinite(tree_flatten_concat(
+            burst_res[c.name]["state"].params)).all())
+        for c in burst_cases)
+    row("chaos/burst-grid", 0.0,
+        f"buckets={burst_buckets};batch1_bitwise={burst_batch1};"
+        f"finite={burst_finite}")
+
+    # --- v2: serving-tier crash recovery ------------------------------------
+    # kill a serve_stream at the halfway snapshot, restore into a FRESH
+    # server, and require the resumed stream's assignments to be bitwise
+    # the uninterrupted run's
+    t_srv = 24
+    srv_rows = np.asarray(jax.random.bernoulli(
+        jax.random.fold_in(KEY, 900), 0.6, (t_srv, n)), np.float32)
+    srv_keys = np.asarray(jax.random.split(
+        jax.random.fold_in(KEY, 901), 2 * t_srv), np.uint32)
+
+    def srv_reqs(t0, t1):
+        return [ServeRequest(tenant=ten, rewards=srv_rows[t],
+                             key=srv_keys[2 * t + i])
+                for t in range(t0, t1)
+                for i, ten in enumerate(("a", "b"))]
+
+    def mk_server():
+        srv = SchedServer(sched, capacity=4, slots=4)
+        for ten in ("a", "b"):
+            srv.join(ten)
+        return srv
+
+    srv_full = mk_server()
+    base_asg = [a for _, a in srv_full.serve_stream(iter(srv_reqs(0, t_srv)))]
+    srv_a = mk_server()
+    first = [a for _, a in srv_a.serve_stream(iter(srv_reqs(0, t_srv // 2)))]
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        srv_a.save(ckpt_dir, step=t_srv // 2)
+        srv_b = mk_server()          # the "crashed-and-restarted" process
+        srv_b.restore(ckpt_dir)
+        second = [a for _, a in
+                  srv_b.serve_stream(iter(srv_reqs(t_srv // 2, t_srv)))]
+    resumed = first + second
+    serve_restore_bitwise = (
+        len(resumed) == len(base_asg)
+        and all(np.array_equal(x, y) for x, y in zip(resumed, base_asg)))
+    row("chaos/serve-restore", 0.0,
+        f"rounds={t_srv};bitwise_match={serve_restore_bitwise}")
+
     BENCH["chaos_suite"] = {
         "horizon": t_sim,
         "grid_cases": len(cases),
@@ -1135,12 +1326,29 @@ def chaos_suite():
         "quarantined_finite": quarantined_finite,
         "unguarded_diverged": unguarded_diverged,
         "norm_cap_held": norm_cap_held,
+        "byz_rate": 0.2,
+        "byz_seeds": seeds,
+        "byz_eval_loss": {
+            k: (round(v, 4) if np.isfinite(v) else None)
+            for k, v in losses.items()},
+        "clean_agg_bitwise": bool(clean_agg_bitwise),
+        "mean_degraded": bool(mean_degraded),
+        "contained_by": {k: bool(v) for k, v in contained_by.items()},
+        "byz_contained": bool(byz_contained),
+        "burst_buckets": int(burst_buckets),
+        "burst_batch1_bitwise": bool(burst_batch1),
+        "burst_finite": bool(burst_finite),
+        "serve_restore_bitwise": bool(serve_restore_bitwise),
     }
     row("chaos/summary", 0.0,
         f"buckets={buckets};batch1={batch1_match};"
         f"restart_shift={restart_shift};regret_shift={regret_shift};"
         f"quarantined_finite={quarantined_finite};"
-        f"unguarded_diverged={unguarded_diverged}")
+        f"unguarded_diverged={unguarded_diverged};"
+        f"clean_agg_bitwise={clean_agg_bitwise};"
+        f"mean_degraded={mean_degraded};byz_contained={byz_contained};"
+        f"burst_buckets={burst_buckets};burst_batch1={burst_batch1};"
+        f"serve_restore={serve_restore_bitwise}")
 
 
 # ---------------------------------------------------------------------------

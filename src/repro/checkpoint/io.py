@@ -68,7 +68,11 @@ def restore_checkpoint(directory: str, step: Optional[int] = None, like: Any = N
     for path, leaf in leaves_like:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path) or "_root"
         arr = flat[key]
-        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+        # jnp.array (not asarray): the device buffer must OWN its bytes.  A
+        # zero-copy alias of the np.load array is unsafe to donate — the
+        # numpy side frees the memory while XLA may still write into it
+        # (restored serve/train state feeds donated executables).
+        out.append(jnp.array(arr, dtype=leaf.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), out
     ), step

@@ -1,0 +1,221 @@
+"""``Aggregator`` — registry-driven robust server aggregation.
+
+Mirrors the channel-scenario and fault subsystems
+(``repro.core.channels.process``, ``repro.core.faults``): an aggregation
+rule is a frozen, hashable dataclass whose scalar knobs are *traced*
+hyper-parameters (the ``TracedHyperParams`` mixin), registered under a
+family name, and applied as a pure jittable function at Step 4 of the FL
+round (``repro.fl.round`` / ``repro.fl.sparse``).  The aggregator
+*composes with* the quarantine gate, it does not replace it: quarantine
+masks non-finite / norm-exploded rows out of ``mask`` (and zeroes them in
+``buffers``) first, then the aggregator turns the surviving rows into one
+(P,) step direction.  Families:
+
+  mean        today's path and the default: zeta-weighted masked mean
+              (Eq. 7), ``scale = mask * zeta * (m / max(n, 1))`` through
+              the fused ``weighted_aggregate`` kernel.  Bitwise-identical
+              to the pre-registry inline code.  Breakdown point 0: one
+              Byzantine row that passes quarantine moves the mean
+              arbitrarily.
+  trimmed_mean
+              coordinate-wise trimmed mean: per parameter coordinate, the
+              ``floor(trim_frac * n)`` smallest and largest participating
+              values are dropped and the rest averaged.  Breakdown point
+              ``trim_frac``.  Unweighted (order statistics ignore zeta).
+  coordinate_median
+              coordinate-wise median (= trimmed mean at the maximal trim
+              depth ``floor((n-1)/2)``).  Breakdown point 1/2 — the
+              strongest of the family, at the price of discarding the
+              most honest signal.  Unweighted.
+  norm_clip   each participating row is scaled to L2 norm at most
+              ``clip_norm`` (``G * min(1, clip_norm / ||G||)``), then the
+              standard zeta-weighted mean path runs.  Bounds any single
+              client's influence without discarding rows; keeps zeta.
+
+``aggregate(buffers, mask, zeta, n_succ)`` returns the (P,) f32 aggregate
+(the caller applies ``-server_lr / m``).  All knobs are read from the
+``sp`` pytree inside ``_aggregate``, never from ``self``, so aggregator
+grids vmap through one program exactly like scenario/fault grids —
+instances are value-hashable, so equal configs share one sweep bucket
+(``AsyncFLTrainer.bucket_signature`` includes the aggregator).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits.base import TracedHyperParams
+from repro.core.channels.process import check_knobs
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator(TracedHyperParams):
+    """Base class: a hashable server-aggregation rule.
+
+    Subclasses set ``FAMILY``/``TRACED`` and implement ``_aggregate``:
+
+      _aggregate(buffers, mask, zeta, n_succ, sp)
+          (M, P) quarantine-masked client buffers, (M,) f32 {0, 1}
+          participation mask, (M,) zeta weights, scalar participant count
+          in -> (P,) f32 aggregate out; every traced knob read from
+          ``sp``.  Must return zeros when nothing participates (the
+          runtime's all-quarantined no-op gate relies on it).
+      example()
+          a default instance — lets tests and benchmarks enumerate the
+          registry.
+    """
+
+    FAMILY: ClassVar[str] = ""
+
+    def _aggregate(self, buffers: jnp.ndarray, mask: jnp.ndarray,
+                   zeta: jnp.ndarray, n_succ: jnp.ndarray, sp) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @classmethod
+    def example(cls) -> "Aggregator":
+        return cls()
+
+    def aggregate(self, buffers: jnp.ndarray, mask: jnp.ndarray,
+                  zeta: jnp.ndarray, n_succ: jnp.ndarray,
+                  params=None) -> jnp.ndarray:
+        """Aggregate a round's surviving client buffers into one (P,) row.
+
+        ``params`` optionally overrides the traced knobs (``self.params()``
+        pytree) — the grid-vmap hook, same convention as
+        ``FaultProcess.inject``.
+        """
+        if params is None or not jax.tree_util.tree_leaves(params):
+            params = self.params()
+        return self._aggregate(buffers, mask, zeta, n_succ, params)
+
+
+# ---------------------------------------------------------------------------
+# registry (mirrors repro.core.faults)
+# ---------------------------------------------------------------------------
+
+_AGG_REGISTRY: Dict[str, Type[Aggregator]] = {}
+
+
+def register_aggregator(cls: Type[Aggregator]) -> Type[Aggregator]:
+    """Class decorator: add an aggregation family to the registry."""
+    if not cls.FAMILY:
+        raise ValueError(
+            f"register_aggregator: {cls.__name__} has no FAMILY name")
+    if cls.FAMILY in _AGG_REGISTRY:
+        raise ValueError(
+            f"register_aggregator: duplicate family {cls.FAMILY!r}")
+    _AGG_REGISTRY[cls.FAMILY] = cls
+    return cls
+
+
+def registered_aggregators() -> Dict[str, Type[Aggregator]]:
+    """Name -> class for every registered aggregation family (a copy)."""
+    return dict(_AGG_REGISTRY)
+
+
+def make_aggregator(family: str, **kwargs) -> Aggregator:
+    """Construct an aggregator by registry name.  Unknown or missing knobs
+    raise eagerly with the family's valid knob list."""
+    try:
+        cls = _AGG_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"make_aggregator: unknown family {family!r}; registered: "
+            f"{sorted(_AGG_REGISTRY)}") from None
+    check_knobs(cls, f"make_aggregator({family!r})", kwargs)
+    return cls(**kwargs)
+
+
+def example_aggregator(family: str) -> Aggregator:
+    """The family's default example instance."""
+    try:
+        cls = _AGG_REGISTRY[family]
+    except KeyError:
+        raise ValueError(
+            f"example_aggregator: unknown family {family!r}; registered: "
+            f"{sorted(_AGG_REGISTRY)}") from None
+    return cls.example()
+
+
+# ---------------------------------------------------------------------------
+# built-in families
+# ---------------------------------------------------------------------------
+
+@register_aggregator
+@dataclasses.dataclass(frozen=True)
+class MeanAgg(Aggregator):
+    """Eq. 7 zeta-weighted masked mean — the default, bitwise-identical to
+    the pre-registry inline Step-4 code (same ops, same order)."""
+
+    FAMILY = "mean"
+    TRACED = ()
+
+    def _aggregate(self, buffers, mask, zeta, n_succ, sp):
+        m = buffers.shape[0]
+        scale = mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        return ops.weighted_aggregate(buffers, scale)
+
+
+@register_aggregator
+@dataclasses.dataclass(frozen=True)
+class TrimmedMeanAgg(Aggregator):
+    """Coordinate-wise trimmed mean at depth ``floor(trim_frac * n)``.
+
+    Tolerates up to ``floor(trim_frac * n)`` Byzantine rows per coordinate
+    side; the trim depth is clamped to ``floor((n-1)/2)`` so at least one
+    value always survives.  Unweighted (zeta is ignored — order statistics
+    have no useful notion of importance weights)."""
+
+    trim_frac: float = 0.25
+
+    FAMILY = "trimmed_mean"
+    TRACED = ("trim_frac",)
+
+    def _aggregate(self, buffers, mask, zeta, n_succ, sp):
+        k = jnp.floor(jnp.clip(sp["trim_frac"], 0.0, 0.5) * n_succ)
+        k = jnp.clip(k, 0.0, jnp.maximum(jnp.floor((n_succ - 1.0) / 2.0), 0.0))
+        return ops.robust_trimmed(buffers, mask, n_succ, k)
+
+
+@register_aggregator
+@dataclasses.dataclass(frozen=True)
+class CoordinateMedianAgg(Aggregator):
+    """Coordinate-wise median: trimmed mean at the maximal depth
+    ``floor((n-1)/2)`` (odd n: the middle value; even n: the mean of the
+    two middles).  Breakdown point 1/2; unweighted."""
+
+    FAMILY = "coordinate_median"
+    TRACED = ()
+
+    def _aggregate(self, buffers, mask, zeta, n_succ, sp):
+        k = jnp.maximum(jnp.floor((n_succ - 1.0) / 2.0), 0.0)
+        return ops.robust_trimmed(buffers, mask, n_succ, k)
+
+
+@register_aggregator
+@dataclasses.dataclass(frozen=True)
+class NormClipAgg(Aggregator):
+    """Per-row L2 norm clip, then the standard zeta-weighted mean.
+
+    Each participating row G is replaced by ``G * min(1, clip_norm /
+    ||G||)`` — any single client's step contribution is bounded by
+    ``clip_norm`` regardless of what it uploads, without discarding honest
+    rows.  Complements (does not subsume) the quarantine's hard
+    ``max_update_norm`` reject."""
+
+    clip_norm: float = 1.0
+
+    FAMILY = "norm_clip"
+    TRACED = ("clip_norm",)
+
+    def _aggregate(self, buffers, mask, zeta, n_succ, sp):
+        m = buffers.shape[0]
+        x = buffers.astype(jnp.float32)
+        norms = jnp.sqrt(jnp.sum(x * x, axis=1))
+        factor = jnp.minimum(1.0, sp["clip_norm"] / jnp.maximum(norms, 1e-12))
+        scale = mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        return ops.weighted_aggregate(x * factor[:, None], scale)

@@ -17,6 +17,21 @@ client-side failures corrupt the upload path:
   byte_flip  update scaling by 2**exponent on hit rows — a flipped
              exponent bit in transit; finite but norm-exploded, the case
              the quarantine's ``max_update_norm`` cap exists for.
+  sign_flip  Byzantine sign-flip: hit rows upload ``-scale * G`` — finite
+             and norm-modest, so it sails through the quarantine gate;
+             the defense is robust aggregation
+             (``repro.core.aggregation``).
+  inner_product
+             ALIE-style colluding inner-product attack: hit rows all
+             upload ``-strength * mean(honest rows)``, the perturbation
+             aimed exactly along the honest-mean direction, computed from
+             the (M, P) batch inside ``_inject``.  Also quarantine-clean
+             by construction.
+  burst      not a corruption itself but a *schedule*: wraps any base
+             family and modulates its ``rate`` knob with a Gilbert-
+             Elliott-style Markov on/off carry (burst faults rather than
+             i.i.d. Bernoulli).  The carry threads through the trainer
+             scans as ``fault_state`` — see ``inject_sched``.
 
 ``inject(key, t, updates)`` returns ``(updates', dropped)`` where
 ``dropped`` is the (M,) f32 {0, 1} unavailability mask.  All randomness
@@ -57,6 +72,22 @@ class FaultProcess(TracedHyperParams):
                                     every traced knob read from ``sp``.
       example()                     a default instance — lets tests and
                                     benchmarks enumerate the registry.
+
+    Families with *temporal structure* (fault schedules) additionally
+    override the carried-state hooks:
+
+      schedule_init()               the family's carried schedule state —
+                                    a dead f32 scalar zero for memoryless
+                                    families (keeps the trainer state
+                                    pytree structure fixed).
+      _inject_sched(key, t, updates, fstate, sp)
+                                    stateful generator returning
+                                    (updates', dropped, fstate').  The
+                                    default delegates to ``_inject`` with
+                                    the SAME key and passes ``fstate``
+                                    through — memoryless families stay
+                                    bitwise-identical to their pre-
+                                    schedule behavior.
     """
 
     FAMILY: ClassVar[str] = ""
@@ -69,6 +100,14 @@ class FaultProcess(TracedHyperParams):
     def example(cls) -> "FaultProcess":
         return cls()
 
+    def schedule_init(self) -> jnp.ndarray:
+        """Initial carried schedule state (dead zero scalar by default)."""
+        return jnp.zeros((), jnp.float32)
+
+    def _inject_sched(self, key, t, updates, fstate, sp):
+        out, dropped = self._inject(key, t, updates, sp)
+        return out, dropped, fstate
+
     def inject(self, key: jax.Array, t: jnp.ndarray, updates: jnp.ndarray,
                params=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Apply the fault family to a round's fresh (M, P) updates.
@@ -77,10 +116,29 @@ class FaultProcess(TracedHyperParams):
         pytree) — the grid-vmap hook, same convention as
         ``ChannelProcess.realize``.  Returns ``(updates', dropped)`` with
         ``dropped`` an (M,) f32 {0, 1} client-unavailability mask.
+        Stateless view: schedule-carrying families run from their initial
+        schedule state (the trainers thread the carry via
+        ``inject_sched``).
         """
         if params is None or not jax.tree_util.tree_leaves(params):
             params = self.params()
-        return self._inject(key, t, updates, params)
+        out, dropped, _ = self._inject_sched(
+            key, t, updates, self.schedule_init(), params)
+        return out, dropped
+
+    def inject_sched(self, key: jax.Array, t: jnp.ndarray,
+                     updates: jnp.ndarray, fstate, params=None):
+        """Stateful injection: ``(updates', dropped, fstate')``.
+
+        The trainer-scan entry point: ``fstate`` is the carried schedule
+        state (``schedule_init()`` at round 0), advanced once per round.
+        Memoryless families consume the key identically to ``inject`` and
+        return ``fstate`` untouched, so threading the carry changes no
+        existing PRNG stream.
+        """
+        if params is None or not jax.tree_util.tree_leaves(params):
+            params = self.params()
+        return self._inject_sched(key, t, updates, fstate, params)
 
 
 # ---------------------------------------------------------------------------
@@ -199,3 +257,120 @@ class ByteFlipFaults(FaultProcess):
         hit = jax.random.bernoulli(key, jnp.clip(sp["rate"], 0.0, 1.0), (m,))
         factor = jnp.where(hit, jnp.exp2(sp["exponent"]), 1.0)
         return updates * factor[:, None], jnp.zeros((m,), jnp.float32)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class SignFlipFaults(FaultProcess):
+    """Byzantine sign-flip: hit rows upload ``-scale * G``.
+
+    Finite and (for modest ``scale``) norm-ordinary, so the quarantine's
+    finiteness and norm gates pass it — with the default ``mean``
+    aggregator the expected step direction becomes
+    ``(1 - rate*(1 + scale)) * G``, i.e. gradient *ascent* once
+    ``rate * (1 + scale) > 1``.  Contained by the robust aggregators
+    (``repro.core.aggregation``): flipped rows are coordinate-wise
+    extremes on the wrong side and get trimmed/out-voted."""
+
+    rate: float = 0.2
+    scale: float = 3.0
+
+    FAMILY = "sign_flip"
+    TRACED = ("rate", "scale")
+
+    def _inject(self, key, t, updates, sp):
+        m = updates.shape[0]
+        hit = jax.random.bernoulli(key, jnp.clip(sp["rate"], 0.0, 1.0), (m,))
+        factor = jnp.where(hit, -sp["scale"], 1.0)
+        return updates * factor[:, None], jnp.zeros((m,), jnp.float32)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class InnerProductFaults(FaultProcess):
+    """ALIE-style colluding inner-product attack.
+
+    Every hit (Byzantine) row uploads the SAME vector
+    ``-strength * mean(honest rows)`` — a perturbation aimed exactly
+    along the honest-mean direction, computed from the round's (M, P)
+    batch inside ``_inject`` (the colluders see each other's honest
+    peers, the strongest standard threat model).  Norm-comparable to an
+    honest update, so quarantine is blind to it; with ``mean`` the
+    aggregate direction flips once ``rate * (1 + strength) > 1``, while
+    coordinate-wise robust aggregators treat the colluding copies as a
+    minority block and trim them."""
+
+    rate: float = 0.2
+    strength: float = 3.0
+
+    FAMILY = "inner_product"
+    TRACED = ("rate", "strength")
+
+    def _inject(self, key, t, updates, sp):
+        m = updates.shape[0]
+        hit = jax.random.bernoulli(key, jnp.clip(sp["rate"], 0.0, 1.0), (m,))
+        honest = (~hit).astype(jnp.float32)
+        n_honest = jnp.maximum(jnp.sum(honest), 1.0)
+        mean_honest = jnp.sum(
+            updates.astype(jnp.float32) * honest[:, None], axis=0) / n_honest
+        attack = -sp["strength"] * mean_honest
+        out = jnp.where(hit[:, None], attack[None, :].astype(updates.dtype),
+                        updates)
+        return out, jnp.zeros((m,), jnp.float32)
+
+
+@register_fault
+@dataclasses.dataclass(frozen=True)
+class BurstFaults(FaultProcess):
+    """Gilbert-Elliott-style burst schedule over any base fault family.
+
+    Not a corruption itself: a two-state Markov on/off carry (entry rate
+    ``p_on``, exit rate ``p_off``) modulates the base family's ``rate``
+    knob — ``rate * on_scale`` while bursting, ``rate * off_scale``
+    otherwise (defaults: full rate in bursts, silent between).  The
+    stationary burst occupancy is ``p_on / (p_on + p_off)``; the carry
+    rides the trainer scans as ``fault_state`` (``inject_sched``), so a
+    burst grid vmaps through one program like any other fault grid.  The
+    stateless ``inject`` view runs from the calm (off) state.
+    """
+
+    base: FaultProcess = dataclasses.field(
+        default_factory=lambda: SignFlipFaults())
+    p_on: float = 0.1
+    p_off: float = 0.25
+    on_scale: float = 1.0
+    off_scale: float = 0.0
+
+    FAMILY = "burst"
+    TRACED = ("p_on", "p_off", "on_scale", "off_scale")
+
+    def __post_init__(self):
+        if "rate" not in self.base.traced_fields():
+            raise ValueError(
+                f"BurstFaults: base family {type(self.base).__name__!r} has "
+                "no traced 'rate' knob to modulate")
+
+    def params(self):
+        """Schedule knobs plus the base family's params nested under
+        "base" (the ``JammingOverlay`` idiom)."""
+        sp = super().params()
+        sp["base"] = self.base.params()
+        return sp
+
+    def _inject_sched(self, key, t, updates, fstate, sp):
+        k_flip, k_base = jax.random.split(key)
+        on = fstate > 0.5
+        mod = jnp.where(on, sp["on_scale"], sp["off_scale"])
+        bp = dict(sp["base"])
+        bp["rate"] = jnp.clip(bp["rate"] * mod, 0.0, 1.0)
+        out, dropped = self.base._inject(k_base, t, updates, bp)
+        p_flip = jnp.where(on, jnp.clip(sp["p_off"], 0.0, 1.0),
+                           jnp.clip(sp["p_on"], 0.0, 1.0))
+        flip = jax.random.bernoulli(k_flip, p_flip)
+        nxt = jnp.where(flip, 1.0 - fstate, fstate)
+        return out, dropped, nxt
+
+    def _inject(self, key, t, updates, sp):
+        out, dropped, _ = self._inject_sched(
+            key, t, updates, self.schedule_init(), sp)
+        return out, dropped

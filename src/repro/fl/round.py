@@ -79,6 +79,24 @@ from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
 _FAULT_TAG = 0xFA17
 
 
+def dispatch_aggregate(aggregator, buffers, mask, zeta, n_succ):
+    """Step-4 aggregation dispatch shared by the dense and sparse runtimes.
+
+    ``aggregator=None`` is the default zeta-weighted masked mean (Eq. 7)
+    inlined exactly as the pre-registry code wrote it — same ops, same
+    order, so legacy trainers stay bitwise.  Anything else is a
+    ``repro.core.aggregation.Aggregator`` (``MeanAgg`` reproduces this
+    default bitwise; the robust families trade zeta weighting for
+    Byzantine tolerance).  ``buffers`` arrive quarantine-masked; returns
+    the (P,) f32 aggregate (zeros when nothing participates).
+    """
+    if aggregator is None:
+        m = buffers.shape[0]
+        scale = mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+        return ops.weighted_aggregate(buffers, scale)
+    return aggregator.aggregate(buffers, mask, zeta, n_succ)
+
+
 class AsyncFLState(NamedTuple):
     params: Any                    # global model w_t
     buffers: jnp.ndarray           # (M, P) flattened G~_i (Eq. 6)
@@ -95,6 +113,9 @@ class AsyncFLState(NamedTuple):
                                    # zeros for open-loop canonical forms)
     staleness: jnp.ndarray         # (M,) age of the buffered G~ in rounds —
                                    # NOT AoI, which resets only on aggregation
+    fault_state: jnp.ndarray       # fault-schedule carry (burst/Markov on-off;
+                                   # dead scalar zero for memoryless families
+                                   # and faultless trainers)
 
 
 class _ServedPre(NamedTuple):
@@ -110,6 +131,7 @@ class _ServedPre(NamedTuple):
     dropped: jnp.ndarray       # (M,)
     local_losses: jnp.ndarray  # (M,)
     ch_states: jnp.ndarray     # (N,) realized Good/Bad vector
+    fault_state: jnp.ndarray   # advanced fault-schedule carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +171,9 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
                                    # was handed in unrealized; the sweep
                                    # driver re-realizes it per case from
                                    # scenario_realize_key(case.init_key)
+    aggregator: Optional[Any] = None  # a repro.core.aggregation Aggregator;
+                                   # None means the default zeta-weighted
+                                   # mean (bitwise-identical to MeanAgg)
 
     def __post_init__(self):
         if isinstance(self.env, ChannelProcess):
@@ -179,7 +204,8 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         Two trainer *instances* with equal signatures lower to the same
         compiled program: the structural parts (cfg, scheduler
         ``hp_signature``, env canonical shapes, loss/proxy function
-        identity, fault instance) specialize the trace, while scheduler
+        identity, fault and aggregator instances) specialize the trace,
+        while scheduler
         traced scalars ride the state ``hp`` pytree and env arrays enter as
         operands — so equal-signature trainers share one bucket and one
         executable, with their differing values stacked on the batch axis.
@@ -195,7 +221,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             env_sig = (treedef, tuple(
                 (tuple(jnp.shape(l)), str(jnp.result_type(l))) for l in leaves))
         return ("async_fl", self.cfg, sched_sig, env_sig, self.loss_fn,
-                self.proxy_loss_fn, self.faults)
+                self.proxy_loss_fn, self.faults, self.aggregator)
 
     # ------------------------------------------------------------------ init
     def init(self, params: Any, key: jax.Array, hp: Any = None) -> AsyncFLState:
@@ -215,6 +241,8 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             t=jnp.zeros((), jnp.int32),
             env_state=self.env.interact_init(),
             staleness=jnp.ones((m,), jnp.float32),
+            fault_state=(self.faults.schedule_init() if self.faults is not None
+                         else jnp.zeros((), jnp.float32)),
         )
 
     def init_batch(
@@ -269,11 +297,16 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         # ---- fault injection: between training and the Eq.-6 carry ---------
         if self.faults is not None:
             # the fault stream lives on its own fold of the round key, so a
-            # faultless trainer's PRNG consumption is bitwise untouched
+            # faultless trainer's PRNG consumption is bitwise untouched; the
+            # schedule carry (burst/Markov on-off) advances once per round —
+            # memoryless families pass it through and consume the key
+            # identically to the stateless inject()
             k_fault = jax.random.fold_in(key, _FAULT_TAG)
-            fresh_updates, dropped = self.faults.inject(k_fault, t, fresh_updates)
+            fresh_updates, dropped, fault_state = self.faults.inject_sched(
+                k_fault, t, fresh_updates, state.fault_state)
         else:
             dropped = jnp.zeros((m,), jnp.float32)
+            fault_state = state.fault_state
 
         # Eq. 6 via `where`, not the arithmetic lerp: a corrupted fresh row
         # must not leak NaN into an inactive client's kept buffer (0 * NaN).
@@ -327,14 +360,14 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         n_succ = jnp.sum(agg_mask)
 
         zeta = state.zeta if cfg.use_zeta else jnp.full((m,), 1.0 / m)
-        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
         if cfg.quarantine:
-            # zero quarantined rows BEFORE the kernel: 0 * NaN = NaN, so a
-            # zero aggregation weight alone cannot contain a poisoned row
+            # zero quarantined rows BEFORE the aggregator: 0 * NaN = NaN, so
+            # a zero aggregation weight alone cannot contain a poisoned row
             agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
         else:
             agg_buffers = buffers
-        agg_flat = ops.weighted_aggregate(agg_buffers, scale)   # (P,) f32
+        agg_flat = dispatch_aggregate(
+            self.aggregator, agg_buffers, agg_mask, zeta, n_succ)  # (P,) f32
         step_vec = -cfg.server_lr / m * agg_flat              # normalized mean step
         delta = tree_unflatten_concat(step_vec, state.params)
         if cfg.quarantine:
@@ -388,6 +421,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             t=t + 1,
             env_state=env_state,
             staleness=staleness,
+            fault_state=fault_state,
         )
         # losses of clients that actually trained this round; the isfinite
         # guard keeps the *metric* finite even while a faulty client's loss
@@ -520,10 +554,11 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
         if self.faults is not None:
             k_fault = jax.random.fold_in(key, _FAULT_TAG)
-            fresh_updates, dropped = self.faults.inject(k_fault, t,
-                                                        fresh_updates)
+            fresh_updates, dropped, fault_state = self.faults.inject_sched(
+                k_fault, t, fresh_updates, state.fault_state)
         else:
             dropped = jnp.zeros((m,), jnp.float32)
+            fault_state = state.fault_state
         active = state.last_success * (1.0 - dropped)
         buffers = jnp.where(active[:, None] > 0.5, fresh_updates, state.buffers)
         has_update = jnp.maximum(state.has_update, active)
@@ -531,7 +566,8 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         ch_states = env.sample_dyn(t, k_env, state.env_state)
         return _ServedPre(buffers=buffers, has_update=has_update,
                           staleness=staleness, active=active, dropped=dropped,
-                          local_losses=local_losses, ch_states=ch_states)
+                          local_losses=local_losses, ch_states=ch_states,
+                          fault_state=fault_state)
 
     def _served_post_impl(self, state, pre, assignment, matcher_state, env):
         """Steps 3 (post-decision) + 4 + bookkeeping, given the server's
@@ -566,12 +602,12 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
         n_succ = jnp.sum(agg_mask)
 
         zeta = state.zeta if cfg.use_zeta else jnp.full((m,), 1.0 / m)
-        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
         if cfg.quarantine:
             agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
         else:
             agg_buffers = buffers
-        agg_flat = ops.weighted_aggregate(agg_buffers, scale)
+        agg_flat = dispatch_aggregate(
+            self.aggregator, agg_buffers, agg_mask, zeta, n_succ)
         step_vec = -cfg.server_lr / m * agg_flat
         delta = tree_unflatten_concat(step_vec, state.params)
         if cfg.quarantine:
@@ -610,6 +646,7 @@ class AsyncFLTrainer:                          # jitted round caches per instanc
             t=t + 1,
             env_state=env_state,
             staleness=staleness,
+            fault_state=pre.fault_state,
         )
         loss_ok = jnp.isfinite(pre.local_losses).astype(jnp.float32)
         loss_w = pre.active * loss_ok

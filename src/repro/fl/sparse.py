@@ -79,8 +79,7 @@ from repro.core.contribution import (
 from repro.core.matching import AdaptiveMatcher, MatcherState, matcher_scores
 from repro.data.pipeline import client_batch_indices, gather_client_batches
 from repro.fl.client import local_sgd
-from repro.fl.round import _FAULT_TAG
-from repro.kernels import ops
+from repro.fl.round import _FAULT_TAG, dispatch_aggregate
 from repro.utils.tree import tree_flatten_concat, tree_unflatten_concat
 
 # fold targets for the sparse-only PRNG streams: the round key's
@@ -112,6 +111,8 @@ class SparseFLState(NamedTuple):
     matcher_state: MatcherState
     t: jnp.ndarray
     env_state: jnp.ndarray
+    fault_state: jnp.ndarray       # fault-schedule carry (dead scalar zero
+                                   # for memoryless families / no faults)
 
 
 class _SparseServedPre(NamedTuple):
@@ -131,6 +132,7 @@ class _SparseServedPre(NamedTuple):
     ch_states: jnp.ndarray     # (N,)
     aoi_sel: jnp.ndarray       # (M,) — posted to the server
     contrib_sel: jnp.ndarray   # (M,) — posted to the server
+    fault_state: jnp.ndarray   # advanced fault-schedule carry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,6 +163,8 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
     availability: Optional[AvailabilityProcess] = None
     realize_key: Optional[jax.Array] = None
     scenario: Optional[ChannelProcess] = None
+    aggregator: Optional[Any] = None  # a repro.core.aggregation Aggregator;
+                                   # None: the default zeta-weighted mean
 
     def __post_init__(self):
         if isinstance(self.env, ChannelProcess):
@@ -206,6 +210,8 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
             matcher_state=AdaptiveMatcher(cfg.matcher_beta).init(),
             t=jnp.zeros((), jnp.int32),
             env_state=self.env.interact_init(),
+            fault_state=(self.faults.schedule_init() if self.faults is not None
+                         else jnp.zeros((), jnp.float32)),
         )
 
     def init_batch(self, params, keys, params_axis=None, hp=None,
@@ -282,10 +288,11 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
 
         if self.faults is not None:
             k_fault = jax.random.fold_in(key, _FAULT_TAG)
-            fresh_updates, dropped = self.faults.inject(k_fault, t,
-                                                        fresh_updates)
+            fresh_updates, dropped, fault_state = self.faults.inject_sched(
+                k_fault, t, fresh_updates, state.fault_state)
         else:
             dropped = jnp.zeros((m,), jnp.float32)
+            fault_state = state.fault_state
 
         # Eq. 6 on the slot rows (`where`, not lerp — see the dense round);
         # an unavailable-but-granted client (availability-scarce rounds)
@@ -339,12 +346,12 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
 
         zeta = (jnp.take(state.zeta, sel) if cfg.use_zeta
                 else jnp.full((m,), 1.0 / m))
-        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
         if cfg.quarantine:
             agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
         else:
             agg_buffers = buffers
-        agg_flat = ops.weighted_aggregate(agg_buffers, scale)
+        agg_flat = dispatch_aggregate(
+            self.aggregator, agg_buffers, agg_mask, zeta, n_succ)
         step_vec = -cfg.server_lr / m * agg_flat
         delta = tree_unflatten_concat(step_vec, state.params)
         if cfg.quarantine:
@@ -429,6 +436,7 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
             matcher_state=matcher_state,
             t=t + 1,
             env_state=env_state,
+            fault_state=fault_state,
         )
         loss_ok = jnp.isfinite(local_losses).astype(jnp.float32)
         loss_w = active * loss_ok
@@ -538,10 +546,11 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
         fresh_updates, local_losses = jax.vmap(one_client)(batches_x, batches_y)
         if self.faults is not None:
             k_fault = jax.random.fold_in(key, _FAULT_TAG)
-            fresh_updates, dropped = self.faults.inject(k_fault, t,
-                                                        fresh_updates)
+            fresh_updates, dropped, fault_state = self.faults.inject_sched(
+                k_fault, t, fresh_updates, state.fault_state)
         else:
             dropped = jnp.zeros((m,), jnp.float32)
+            fault_state = state.fault_state
         active = jnp.where(avail_sel > 0.5,
                            jnp.take(state.last_success, sel) * (1.0 - dropped),
                            0.0)
@@ -555,7 +564,8 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
             buffers=buffers, has_update=has_update, stale_sel=stale_sel,
             active=active, dropped=dropped, local_losses=local_losses,
             ch_states=ch_states, aoi_sel=jnp.take(state.aoi, sel),
-            contrib_sel=jnp.take(state.contrib, sel))
+            contrib_sel=jnp.take(state.contrib, sel),
+            fault_state=fault_state)
 
     def _served_post_impl(self, state, pre, assignment, matcher_state, key,
                           env):
@@ -595,12 +605,12 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
 
         zeta = (jnp.take(state.zeta, sel) if cfg.use_zeta
                 else jnp.full((m,), 1.0 / m))
-        scale = agg_mask * zeta * (m / jnp.maximum(n_succ, 1.0))
         if cfg.quarantine:
             agg_buffers = jnp.where(agg_mask[:, None] > 0.5, buffers, 0.0)
         else:
             agg_buffers = buffers
-        agg_flat = ops.weighted_aggregate(agg_buffers, scale)
+        agg_flat = dispatch_aggregate(
+            self.aggregator, agg_buffers, agg_mask, zeta, n_succ)
         step_vec = -cfg.server_lr / m * agg_flat
         delta = tree_unflatten_concat(step_vec, state.params)
         if cfg.quarantine:
@@ -676,6 +686,7 @@ class SparseAsyncFLTrainer:                    # trainer (env holds arrays)
             matcher_state=matcher_state,
             t=t + 1,
             env_state=env_state,
+            fault_state=pre.fault_state,
         )
         loss_ok = jnp.isfinite(pre.local_losses).astype(jnp.float32)
         loss_w = active * loss_ok

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import glr_scan as _glr
 from repro.kernels import glr_step as _gs
+from repro.kernels import robust_agg as _ra
 from repro.kernels import weighted_aggregate as _wa
 from repro.kernels import ref as ref  # re-export the oracles
 
@@ -152,6 +153,45 @@ def weighted_aggregate(
         return _wa.weighted_aggregate(updates, scale, interpret=True)
     raise ValueError(
         f"weighted_aggregate: unknown backend {backend!r}; use one of {_WA_BACKENDS}")
+
+
+_RT_BACKENDS = ("pallas", "pallas_interpret", "jnp")
+
+
+def robust_trimmed(
+    updates: jnp.ndarray,
+    mask: jnp.ndarray,
+    n_succ: jnp.ndarray,
+    k_trim: jnp.ndarray,
+    backend: str | None = None,
+) -> jnp.ndarray:
+    """Masked per-coordinate trimmed mean / median.
+
+    updates (M, P), mask (M,) {0,1}, n_succ scalar participant count,
+    k_trim scalar trim depth -> (P,) f32.  ``k_trim = floor((n-1)/2)``
+    yields the coordinate-wise median; zeros when nothing participates.
+    Backs the robust aggregator families in ``repro.core.aggregation`` and
+    runs inside the scan-fused FL round, so the dispatch follows the
+    ``weighted_aggregate`` policy (Pallas interpret mode is never
+    auto-selected on the hot path):
+
+      None               auto: "pallas" on TPU, "jnp" elsewhere
+      "pallas"           compiled Pallas kernel (interpret mode off-TPU)
+      "pallas_interpret" Pallas kernel forced into interpret mode (tests)
+      "jnp"              the pure-jnp oracle in ``repro.kernels.ref``
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend == "jnp":
+        return ref.robust_trimmed(updates, mask, n_succ, k_trim)
+    if backend == "pallas":
+        return _ra.robust_trimmed(updates, mask, n_succ, k_trim,
+                                  interpret=_interpret())
+    if backend == "pallas_interpret":
+        return _ra.robust_trimmed(updates, mask, n_succ, k_trim,
+                                  interpret=True)
+    raise ValueError(
+        f"robust_trimmed: unknown backend {backend!r}; use one of {_RT_BACKENDS}")
 
 
 def flash_attention(

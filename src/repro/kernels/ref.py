@@ -184,6 +184,45 @@ def weighted_aggregate(updates: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# robust_trimmed — masked per-coordinate trimmed mean / median
+# ---------------------------------------------------------------------------
+
+def robust_trimmed(updates: jnp.ndarray, mask: jnp.ndarray,
+                   n_succ: jnp.ndarray, k_trim: jnp.ndarray) -> jnp.ndarray:
+    """Masked coordinate-wise trimmed mean via rank selection.
+
+    updates: (M, P) client update matrix (any float dtype)
+    mask:    (M,)   f32 {0, 1} participation mask
+    n_succ:  scalar f32 participant count (== sum(mask))
+    k_trim:  scalar f32 integer-valued trim depth
+    returns (P,) f32: per coordinate, the mean of the participating values
+    with the ``k_trim`` smallest and ``k_trim`` largest dropped.  With
+    ``k_trim = floor((n-1)/2)`` this is exactly the coordinate-wise median
+    (odd n: middle element; even n: mean of the two middles).  Zeros when
+    no row participates.
+
+    Selection is rank-based rather than sort-based so the Pallas kernel can
+    reproduce it with 2-D compare/accumulate ops only: a participating row's
+    per-coordinate rank is the number of participating rows strictly below
+    it, ties broken by row index.  Ranks are small exact integers and the
+    kept values are summed in row order, so kernel and oracle agree bitwise.
+    """
+    x = updates.astype(jnp.float32)
+    m = x.shape[0]
+    part = mask > 0.5
+    i = jnp.arange(m)
+    tie_lo = (i[None, :] < i[:, None])[:, :, None]            # j beats i on ties
+    beats = (x[None, :, :] < x[:, None, :]) | ((x[None, :, :] == x[:, None, :]) & tie_lo)
+    rank = jnp.sum(
+        jnp.where(part[None, :, None], beats, False).astype(jnp.float32),
+        axis=1)                                               # (M, P)
+    k = jnp.maximum(k_trim, 0.0)
+    keep = part[:, None] & (rank >= k) & (rank < n_succ - k)
+    denom = jnp.maximum(n_succ - 2.0 * k, 1.0)
+    return jnp.sum(jnp.where(keep, x, 0.0), axis=0) / denom
+
+
+# ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
 

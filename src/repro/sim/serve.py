@@ -72,6 +72,19 @@ recompiles after warmup.  ``tests/test_serve_scale.py`` pins the stream's
 output bitwise-equal to the synchronous loop over the same request trace,
 including across churn and mid-stream resizes.
 
+Boundary hygiene and crash recovery
+-----------------------------------
+Reward vectors are sanitized at the packing boundary (``_sanitize_rewards``):
+non-finite entries become 0.0 and finite entries clip to [0, 1] before they
+can reach the compiled step, with a per-tenant ``bad_rewards`` counter in
+``stats()``; valid vectors pack bitwise-unchanged.  ``save()``/``restore()``
+snapshot the complete serving state — the device-resident ``TenantSlots``
+pytree via ``repro.checkpoint.io`` plus a JSON sidecar for the host
+bookkeeping (tenant map, free-slot pool, counters) — so a server killed
+mid-``serve_stream`` resumes from the last snapshot and emits the exact
+decision stream the uninterrupted run would have produced
+(``tests/test_serve_restore.py``).
+
 Churn without recompiles
 ------------------------
 ``join``/``leave`` run one shared ``admit`` program that overwrites a
@@ -104,6 +117,8 @@ reproduces its standalone ``run()`` bitwise (``tests/test_fl_served.py``).
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from collections import deque
 from typing import (
     Any, Dict, Iterable, Iterator, List, NamedTuple, Optional, Sequence,
@@ -113,6 +128,8 @@ from typing import (
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
 
 from repro.core.aoi import init_aoi, update_aoi
 from repro.core.bandits.base import init_with_hp
@@ -427,6 +444,7 @@ class SchedServer:
         self._stream_steps = 0
         self._rows_dispatched = 0
         self._sizes_used: Dict[int, int] = {}
+        self._bad_rewards: Dict[Any, int] = {}
 
         self._sig = _sched_sig(scheduler)
         self._backend = jax.default_backend()
@@ -556,7 +574,109 @@ class SchedServer:
         slot = self._tenants[tenant]
         return jax.tree_util.tree_map(lambda x: x[slot], self._state)
 
+    # ---------------------------------------------------------- persistence
+    def save(self, directory: str, step: int = 0) -> str:
+        """Snapshot the full serving state to ``directory``.
+
+        Two artifacts: the device-resident ``TenantSlots`` pytree goes
+        through ``repro.checkpoint.io.save_checkpoint`` (atomic npz +
+        manifest, ``step_{step}.npz``), and the host bookkeeping — tenant
+        map, free-pool cursor/recycle stack, counters, ``bad_rewards`` —
+        lands in a ``serve_{step}.json`` sidecar.  Tenant ids must
+        round-trip through JSON (ints / strings / floats); a restored
+        server continues the decision stream bitwise (see ``restore``).
+        Synchronizes on the state (device work must retire before the
+        bytes are read), so snapshot mid-``serve_stream`` is safe between
+        steps.
+        """
+        path = save_checkpoint(directory, step, self._state)
+        meta = {
+            "sig": str(self._sig),
+            "capacity": self.capacity,
+            "rows": self.rows,
+            "slots": self.slots,
+            "tenants": [[t, int(s)] for t, s in self._tenants.items()],
+            "free_next_fresh": self._free._next_fresh,
+            "free_recycled": list(self._free._recycled),
+            "served": self._served,
+            "steps": self._steps,
+            "stream_steps": self._stream_steps,
+            "rows_dispatched": self._rows_dispatched,
+            "sizes_used": [[int(b), int(c)]
+                           for b, c in self._sizes_used.items()],
+            "bad_rewards": [[t, int(c)]
+                            for t, c in self._bad_rewards.items()],
+        }
+        with open(os.path.join(directory, f"serve_{step}.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        return path
+
+    def restore(self, directory: str, step: Optional[int] = None,
+                warm: bool = True) -> int:
+        """Load a ``save()`` snapshot into this server; returns the step.
+
+        The server must be constructed with the same scheduler
+        configuration / capacity / slots as the one that saved (checked
+        against the sidecar — the compiled programs are pure functions of
+        that configuration, so a matching server re-enters the same
+        executables).  Restores the slot pytree structure-directed
+        (bitwise: every leaf comes back with its exact dtype and bytes,
+        re-placed on the mesh when sharded) and the host bookkeeping, then
+        re-warms the AOT step ladder (``warm=False`` skips, e.g. when the
+        process-level executable cache is known hot).  A stream killed
+        after step k and resumed from the step-k snapshot emits the exact
+        assignments the uninterrupted run would have
+        (``tests/test_serve_restore.py``).
+        """
+        state, step = restore_checkpoint(directory, step=step,
+                                         like=self._state)
+        with open(os.path.join(directory, f"serve_{step}.json")) as f:
+            meta = json.load(f)
+        if meta["sig"] != str(self._sig):
+            raise ValueError(
+                f"SchedServer.restore: snapshot was saved by a different "
+                f"scheduler configuration ({meta['sig']} != {self._sig})")
+        for field in ("capacity", "rows", "slots"):
+            if meta[field] != getattr(self, field):
+                raise ValueError(
+                    f"SchedServer.restore: snapshot {field}="
+                    f"{meta[field]} != server {field}={getattr(self, field)}")
+        self._state = shard_slots(state, self._mesh) if self.shard else state
+        self._tenants = {t: int(s) for t, s in meta["tenants"]}
+        self._free = _FreePool(self.capacity)
+        self._free._next_fresh = int(meta["free_next_fresh"])
+        self._free._recycled = [int(s) for s in meta["free_recycled"]]
+        self._served = int(meta["served"])
+        self._steps = int(meta["steps"])
+        self._stream_steps = int(meta["stream_steps"])
+        self._rows_dispatched = int(meta["rows_dispatched"])
+        self._sizes_used = {int(b): int(c) for b, c in meta["sizes_used"]}
+        self._bad_rewards = {t: int(c) for t, c in meta["bad_rewards"]}
+        if warm:
+            self.warm()
+        return step
+
     # -------------------------------------------------------------- serving
+    def _sanitize_rewards(self, tenant, rewards) -> np.ndarray:
+        """Clip one request's reward vector to finite [0, 1] at the service
+        boundary.
+
+        The compiled step trusts its operands (reward semantics are
+        probabilities of successful transmission), so a tenant posting NaN /
+        inf / out-of-range rewards must be caught HERE, before its vector is
+        packed: non-finite entries become 0.0, finite entries clip to
+        [0, 1], and the tenant's ``bad_rewards`` counter (surfaced in
+        ``stats()``) increments once per offending request.  A valid vector
+        takes the early return and is packed bitwise-unchanged — clean
+        streams pay one vectorized check and nothing else.
+        """
+        r = np.asarray(rewards, np.float32)
+        finite = np.isfinite(r)
+        if finite.all() and (r >= 0.0).all() and (r <= 1.0).all():
+            return r
+        self._bad_rewards[tenant] = self._bad_rewards.get(tenant, 0) + 1
+        return np.clip(np.where(finite, r, 0.0), 0.0, 1.0).astype(np.float32)
+
     def _take_batch(self, pending: deque, limit: int):
         """Pop up to ``limit`` unique-tenant requests off ``pending``
         (deferring same-tenant duplicates back to the FRONT, in order) —
@@ -600,7 +720,8 @@ class SchedServer:
         slots = np.full((b,), self.capacity, np.int32)
         slots[:live] = [s for (_, _, s) in batch]
         rewards = np.zeros((b, n), np.float32)
-        rewards[:live] = [rq.rewards for (_, rq, _) in batch]
+        rewards[:live] = [self._sanitize_rewards(rq.tenant, rq.rewards)
+                          for (_, rq, _) in batch]
         keys = np.zeros((b, 2), np.uint32)
         keys[:live] = [rq.key for (_, rq, _) in batch]
 
@@ -648,7 +769,7 @@ class SchedServer:
             mask = np.zeros((self.slots,), bool)
             for j, (i, rq, slot) in enumerate(batch):
                 slots[j] = slot
-                rewards[j] = np.asarray(rq.rewards, np.float32)
+                rewards[j] = self._sanitize_rewards(rq.tenant, rq.rewards)
                 keys[j] = np.asarray(rq.key, np.uint32)
                 if rq.contrib is not None:
                     contrib[j] = np.asarray(rq.contrib, np.float32)
@@ -778,5 +899,6 @@ class SchedServer:
                 "rows_dispatched": self._rows_dispatched,
                 "batch_occupancy": self._served / rows,
                 "sizes_used": dict(self._sizes_used),
+                "bad_rewards": dict(self._bad_rewards),
                 "sharded": self.shard,
                 "compiles": self.compiles, "compile_s": self.compile_s}

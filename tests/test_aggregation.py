@@ -1,0 +1,296 @@
+"""Robust server aggregation (``repro.core.aggregation``).
+
+Contracts under test (the Byzantine-robustness half of the PR):
+
+  * the registry mirrors faults/channels: every family constructs via
+    ``make_aggregator``, enumerates via ``example_aggregator``, and rejects
+    unknown knobs/families eagerly;
+  * ``mean`` is BITWISE the pre-registry inline Step-4 code — both at the
+    ``aggregate()`` level and through a full dense/sparse trainer run with
+    ``aggregator=None`` vs an explicit ``MeanAgg``;
+  * breakdown-point properties (stub-compatible hypothesis strategies):
+    planting up to ``k`` arbitrarily-scaled rows never pushes the trimmed
+    mean outside the honest per-coordinate range, and the coordinate
+    median survives any minority corruption;
+  * the fused Pallas ``robust_trimmed`` kernel (interpret mode) agrees
+    BITWISE with the jnp oracle across random masks and trim depths;
+  * order-statistic families ignore zeta; ``norm_clip`` bounds any single
+    row's contribution without perturbing in-norm rows.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import (
+    Aggregator,
+    CoordinateMedianAgg,
+    MeanAgg,
+    NormClipAgg,
+    TrimmedMeanAgg,
+    example_aggregator,
+    make_aggregator,
+    registered_aggregators,
+)
+from repro.core.bandits import GLRCUCB
+from repro.core.bandits.base import stack_params
+from repro.core.channels import make_stationary
+from repro.fl import AsyncFLConfig, AsyncFLTrainer
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+M, N, D = 6, 9, 12
+
+
+def _loss(p, x, y):
+    return jnp.mean((x @ p["w"] - y) ** 2)
+
+
+def _params():
+    return {"w": jnp.full((D,), 0.5, jnp.float32)}
+
+
+def _data(rounds, seed=0):
+    bx = jax.random.normal(jax.random.PRNGKey(seed), (rounds, M, 1, 4, D))
+    by = jnp.sum(bx, -1) * 0.3
+    return bx, by
+
+
+def _trainer(aggregator=None, **cfg_kw):
+    env = make_stationary(jnp.full((N,), 0.8))
+    cfg = AsyncFLConfig(n_clients=M, n_channels=N, **cfg_kw)
+    return AsyncFLTrainer(cfg=cfg, scheduler=GLRCUCB(N, M, history=64),
+                          env=env, loss_fn=_loss, aggregator=aggregator)
+
+
+def _bits(x):
+    return np.asarray(x, np.float32).view(np.uint32)
+
+
+def _rand_round(seed, m=M, p=16):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    buffers = jax.random.normal(k1, (m, p), jnp.float32)
+    mask = jax.random.bernoulli(k2, 0.7, (m,)).astype(jnp.float32)
+    zeta = jax.random.uniform(k3, (m,), jnp.float32, 0.05, 0.4)
+    n_succ = jnp.sum(mask)
+    return buffers, mask, zeta, n_succ
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_aggregator_registry_covers_the_four_families():
+    fams = registered_aggregators()
+    assert {"mean", "trimmed_mean", "coordinate_median",
+            "norm_clip"} <= set(fams)
+    buffers, mask, zeta, n_succ = _rand_round(0)
+    for name, cls in fams.items():
+        agg = example_aggregator(name)
+        assert isinstance(agg, Aggregator) and cls.FAMILY == name
+        out = agg.aggregate(buffers, mask, zeta, n_succ)
+        assert out.shape == (buffers.shape[1],)
+        assert bool(jnp.isfinite(out).all()), name
+
+
+def test_make_aggregator_rejects_unknown_knobs():
+    with pytest.raises(ValueError, match="unknown knob"):
+        make_aggregator("trimmed_mean", trim_fraction=0.2)
+    with pytest.raises(ValueError, match="unknown family"):
+        make_aggregator("krum")
+
+
+def test_aggregator_grids_vmap_through_one_call():
+    """Traced-knob contract: a stacked grid of trim depths flows through one
+    vmapped aggregate."""
+    grid = [make_aggregator("trimmed_mean", trim_frac=v) for v in (0.0, 0.4)]
+    sp = stack_params(grid)
+    buffers, mask, zeta, n_succ = _rand_round(1)
+    out = jax.vmap(
+        lambda p: grid[0].aggregate(buffers, mask, zeta, n_succ, params=p))(sp)
+    assert out.shape == (2, buffers.shape[1])
+    # depth 0 with a full-rate grid entry must differ from depth 0.4
+    assert not bool(jnp.array_equal(out[0], out[1]))
+
+
+# ---------------------------------------------------------------------------
+# mean: bitwise the legacy inline path
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**16 - 1))
+def test_mean_agg_is_bitwise_the_inline_step4(seed):
+    buffers, mask, zeta, n_succ = _rand_round(seed)
+    m = buffers.shape[0]
+    scale = mask * zeta * (m / jnp.maximum(n_succ, 1.0))
+    ref = ops.weighted_aggregate(buffers, scale)
+    out = MeanAgg().aggregate(buffers, mask, zeta, n_succ)
+    assert (_bits(out) == _bits(ref)).all()
+
+
+def test_trainer_with_explicit_mean_agg_is_bitwise_default():
+    """aggregator=None (legacy inline) vs MeanAgg: the whole 10-round dense
+    run must agree bitwise — every state leaf and every metric."""
+    bx, by = _data(10)
+    keys = jax.random.split(jax.random.PRNGKey(3), 10)
+    a_st, a_mets = _trainer(None).run(
+        _trainer(None).init(_params(), KEY), bx, by, keys)
+    b_tr = _trainer(make_aggregator("mean"))
+    b_st, b_mets = b_tr.run(b_tr.init(_params(), KEY), bx, by, keys)
+    for la, lb in zip(jax.tree_util.tree_leaves(a_st),
+                      jax.tree_util.tree_leaves(b_st)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for k in a_mets:
+        np.testing.assert_array_equal(np.asarray(a_mets[k]),
+                                      np.asarray(b_mets[k]))
+
+
+def test_sparse_trainer_with_explicit_mean_agg_is_bitwise_default():
+    from repro.fl import SparseFLConfig, SparseAsyncFLTrainer
+    n_cl, nch, rounds = 12, 6, 6
+    rng = np.random.default_rng(0)
+    cx = jnp.asarray(rng.normal(size=(n_cl, 8, D)).astype(np.float32))
+    cy = jnp.asarray(rng.normal(size=(n_cl, 8)).astype(np.float32))
+    env = make_stationary(jnp.full((nch,), 0.8))
+
+    def mk(agg):
+        return SparseAsyncFLTrainer(
+            SparseFLConfig(n_clients=n_cl, n_sched=4, n_channels=nch,
+                           batch_size=4, local_epochs=1),
+            GLRCUCB(nch, 4, history=32), env, _loss, aggregator=agg)
+
+    keys = jax.random.split(jax.random.PRNGKey(4), rounds)
+    a = mk(None)
+    b = mk(make_aggregator("mean"))
+    a_st, a_mets = a.run(a.init(_params(), KEY), cx, cy, keys)
+    b_st, b_mets = b.run(b.init(_params(), KEY), cx, cy, keys)
+    for la, lb in zip(jax.tree_util.tree_leaves(a_st),
+                      jax.tree_util.tree_leaves(b_st)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    for k in a_mets:
+        np.testing.assert_array_equal(np.asarray(a_mets[k]),
+                                      np.asarray(b_mets[k]))
+
+
+# ---------------------------------------------------------------------------
+# breakdown-point properties
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.integers(1, 2),
+       st.floats(10.0, 1e6))
+def test_trimmed_mean_stays_in_honest_range_under_k_outliers(seed, n_bad,
+                                                             outlier):
+    """With trim depth >= the number of corrupted rows, the per-coordinate
+    trimmed mean lies within [min, max] of the HONEST participating values
+    — arbitrary-magnitude corruption cannot drag it outside."""
+    m, p = 8, 10
+    k = jax.random.PRNGKey(seed)
+    buffers = jax.random.normal(k, (m, p), jnp.float32)
+    # corrupt the first n_bad rows with +/- outlier
+    sign = jnp.where(jnp.arange(p) % 2 == 0, 1.0, -1.0)
+    buffers = buffers.at[:n_bad].set(outlier * sign)
+    mask = jnp.ones((m,), jnp.float32)
+    n_succ = jnp.sum(mask)
+    out = ops.robust_trimmed(buffers, mask, n_succ,
+                             jnp.asarray(float(n_bad)))
+    honest = buffers[n_bad:]
+    lo, hi = jnp.min(honest, 0), jnp.max(honest, 0)
+    assert bool(jnp.all(out >= lo - 1e-5)) and bool(jnp.all(out <= hi + 1e-5))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**16 - 1))
+def test_coordinate_median_survives_minority_corruption(seed):
+    """floor((n-1)/2) corrupted rows (a strict minority) cannot push the
+    median outside the honest range — breakdown point 1/2."""
+    m, p = 7, 8
+    n_bad = (m - 1) // 2
+    key = jax.random.PRNGKey(seed)
+    buffers = jax.random.normal(key, (m, p), jnp.float32)
+    buffers = buffers.at[:n_bad].set(1e8)
+    mask = jnp.ones((m,), jnp.float32)
+    out = CoordinateMedianAgg().aggregate(
+        buffers, mask, jnp.full((m,), 1.0 / m), jnp.sum(mask))
+    honest = buffers[n_bad:]
+    lo, hi = jnp.min(honest, 0), jnp.max(honest, 0)
+    assert bool(jnp.all(out >= lo - 1e-5)) and bool(jnp.all(out <= hi + 1e-5))
+
+
+def test_median_matches_numpy_on_participating_rows():
+    buffers, mask, zeta, n_succ = _rand_round(7, m=9, p=12)
+    out = CoordinateMedianAgg().aggregate(buffers, mask, zeta, n_succ)
+    rows = np.asarray(buffers)[np.asarray(mask) > 0.5]
+    np.testing.assert_allclose(np.asarray(out), np.median(rows, axis=0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_zero_participants_aggregate_to_zero():
+    # quarantine zeroes rejected rows in ``buffers`` before the aggregator
+    # runs, so an all-rejected round presents finite rows + an all-zero
+    # mask; every family must return exact zeros for it
+    buffers = jnp.full((M, 8), 1e9, jnp.float32)
+    mask = jnp.zeros((M,), jnp.float32)
+    for name in registered_aggregators():
+        out = example_aggregator(name).aggregate(
+            buffers, mask, jnp.full((M,), 1.0 / M), jnp.sum(mask))
+        np.testing.assert_array_equal(np.asarray(out), 0.0, err_msg=name)
+
+
+def test_order_statistic_families_ignore_zeta():
+    buffers, mask, _, n_succ = _rand_round(9)
+    za = jnp.full((M,), 1.0 / M)
+    zb = jax.random.uniform(jax.random.PRNGKey(11), (M,), jnp.float32, 0.0, 9.0)
+    for agg in (TrimmedMeanAgg(trim_frac=0.25), CoordinateMedianAgg()):
+        a = agg.aggregate(buffers, mask, za, n_succ)
+        b = agg.aggregate(buffers, mask, zb, n_succ)
+        assert (_bits(a) == _bits(b)).all()
+
+
+def test_norm_clip_bounds_the_attacker_and_spares_in_norm_rows():
+    buffers, mask, zeta, n_succ = _rand_round(10)
+    big = buffers.at[0].set(1e6).at[0, 0].set(-1e6)
+    mask = mask.at[0].set(1.0)
+    n_succ = jnp.sum(mask)
+    clip = NormClipAgg(clip_norm=2.0)
+    out = clip.aggregate(big, mask, zeta, n_succ)
+    assert bool(jnp.isfinite(out).all())
+    # triangle inequality: ||out|| <= sum_i w_i * min(||row_i||, clip_norm)
+    w = np.asarray(mask * zeta * (M / n_succ))
+    norms = np.minimum(np.linalg.norm(np.asarray(big), axis=1), 2.0)
+    assert float(jnp.linalg.norm(out)) <= float(np.sum(w * norms)) + 1e-3
+    # rows already inside the norm ball pass through the mean path bitwise
+    small = jnp.clip(buffers, -0.1, 0.1)
+    a = clip.aggregate(small, mask, zeta, n_succ)
+    b = MeanAgg().aggregate(small, mask, zeta, n_succ)
+    assert (_bits(a) == _bits(b)).all()
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: Pallas interpret mode vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**16 - 1), st.integers(0, 3))
+def test_robust_trimmed_kernel_matches_oracle_bitwise(seed, k_trim):
+    m, p = 6, 40
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    updates = jax.random.normal(k1, (m, p), jnp.float32)
+    mask = jax.random.bernoulli(k2, 0.8, (m,)).astype(jnp.float32)
+    n_succ = jnp.sum(mask)
+    k_eff = jnp.minimum(jnp.asarray(float(k_trim)),
+                        jnp.maximum(jnp.floor((n_succ - 1.0) / 2.0), 0.0))
+    ref = ops.robust_trimmed(updates, mask, n_succ, k_eff, backend="jnp")
+    ker = ops.robust_trimmed(updates, mask, n_succ, k_eff,
+                             backend="pallas_interpret")
+    assert (_bits(ker) == _bits(ref)).all()
+
+
+def test_robust_trimmed_unknown_backend_raises():
+    buffers, mask, _, n_succ = _rand_round(12)
+    with pytest.raises(ValueError, match="unknown backend"):
+        ops.robust_trimmed(buffers, mask, n_succ, jnp.asarray(1.0),
+                           backend="cuda")

@@ -12,7 +12,13 @@ GLR-CUCB reward sanitization — including the PR's acceptance checks:
     while the unguarded baseline diverges;
   * the streaming-GLR detector state stays finite under corrupted reward
     streams (property-based, runs under the conftest hypothesis stub and
-    the real package alike).
+    the real package alike);
+  * (Byzantine half) memoryless families run identically through
+    ``inject`` and ``inject_sched``; the Gilbert-Elliott ``burst``
+    schedule matches its closed-form occupancy ``p_on / (p_on + p_off)``,
+    its on/off carry actually threads through the trainer scan, and a
+    silent schedule is bitwise-neutral; sign-flip / ALIE trainers stay
+    finite under a robust aggregator.
 """
 import jax
 import jax.numpy as jnp
@@ -75,7 +81,8 @@ def _bits(tree):
 
 def test_fault_registry_covers_the_three_families():
     fams = registered_faults()
-    assert {"dropout", "nan_grads", "byte_flip"} <= set(fams)
+    assert {"dropout", "nan_grads", "byte_flip",
+            "sign_flip", "inner_product", "burst"} <= set(fams)
     for name, cls in fams.items():
         f = example_fault(name)
         assert isinstance(f, FaultProcess) and cls.FAMILY == name
@@ -276,6 +283,110 @@ def test_fault_free_trainer_prng_stream_is_untouched():
     a, _ = plain.run(plain.init(_params(), KEY), bx, by, keys)
     b, _ = zeroed.run(zeroed.init(_params(), KEY), bx, by, keys)
     assert (_bits(a.params) == _bits(b.params)).all()
+
+
+# ---------------------------------------------------------------------------
+# Byzantine families + the burst schedule
+# ---------------------------------------------------------------------------
+
+def test_memoryless_families_run_identically_through_inject_sched():
+    """For every family except ``burst``, ``inject_sched`` must consume the
+    key exactly like the stateless ``inject`` (bitwise-equal outputs) and
+    hand the schedule carry back untouched — the contract that lets the
+    trainers thread ``fault_state`` without perturbing any PRNG stream."""
+    u = jax.random.normal(jax.random.fold_in(KEY, 1), (M, 8))
+    for name in registered_faults():
+        if name == "burst":
+            continue
+        f = example_fault(name)
+        a_u, a_d = f.inject(KEY, jnp.array(3), u)
+        s_u, s_d, fstate = f.inject_sched(KEY, jnp.array(3), u,
+                                          f.schedule_init())
+        np.testing.assert_array_equal(np.asarray(a_u), np.asarray(s_u),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(a_d), np.asarray(s_d),
+                                      err_msg=name)
+        np.testing.assert_array_equal(np.asarray(fstate),
+                                      np.asarray(f.schedule_init()),
+                                      err_msg=name)
+
+
+def test_burst_occupancy_matches_closed_form():
+    """The Gilbert-Elliott carry's empirical on-fraction over a long scan
+    matches the stationary occupancy p_on / (p_on + p_off)."""
+    p_on, p_off = 0.2, 0.3
+    f = make_fault("burst", base=make_fault("sign_flip"),
+                   p_on=p_on, p_off=p_off)
+    u = jnp.ones((2, 2), jnp.float32)
+
+    def step(fstate, key):
+        _, _, nxt = f.inject_sched(key, jnp.array(0), u, fstate)
+        return nxt, nxt
+
+    keys = jax.random.split(jax.random.fold_in(KEY, 2), 4000)
+    _, traj = jax.lax.scan(step, f.schedule_init(), keys)
+    occ = float(jnp.mean(traj))
+    assert abs(occ - p_on / (p_on + p_off)) < 0.06
+    assert set(np.unique(np.asarray(traj))) <= {0.0, 1.0}
+
+
+def test_silent_burst_schedule_is_bitwise_neutral():
+    """p_on = 0 with off_scale = 0 keeps the chain calm and the modulated
+    rate at zero: the trainer run must be bitwise the faults=None run
+    (the fault stream lives on its own fold tag, and rate-0 corruption
+    multiplies by exactly 1.0)."""
+    env = make_stationary(jnp.full((N,), 0.8))
+    silent = make_fault("burst", base=make_fault("sign_flip", rate=0.5),
+                        p_on=0.0, p_off=0.3, off_scale=0.0)
+    bx, by = _data(10)
+    keys = jax.random.split(jax.random.PRNGKey(10), 10)
+    plain = _trainer(env)
+    burst = _trainer(env, faults=silent)
+    a, _ = plain.run(plain.init(_params(), KEY), bx, by, keys)
+    b, _ = burst.run(burst.init(_params(), KEY), bx, by, keys)
+    assert (_bits(a.params) == _bits(b.params)).all()
+    assert float(b.fault_state) == 0.0          # the chain never left calm
+
+
+def test_burst_carry_threads_through_the_trainer_scan():
+    """p_on = 1, p_off = 0: the chain enters the burst after round 0 and
+    never leaves.  The stateless ``inject`` view (always calm, silent off
+    state) would inject nothing — so a divergence from the plain trainer
+    proves the carry is genuinely advanced across rounds, not re-seeded."""
+    env = make_stationary(jnp.full((N,), 0.8))
+    always_on = make_fault("burst",
+                           base=make_fault("sign_flip", rate=1.0, scale=3.0),
+                           p_on=1.0, p_off=0.0, off_scale=0.0)
+    bx, by = _data(12)
+    keys = jax.random.split(jax.random.PRNGKey(11), 12)
+    plain = _trainer(env)
+    burst = _trainer(env, faults=always_on)
+    a, _ = plain.run(plain.init(_params(), KEY), bx, by, keys)
+    b, _ = burst.run(burst.init(_params(), KEY), bx, by, keys)
+    assert float(b.fault_state) == 1.0          # absorbed into the burst
+    assert not (_bits(a.params) == _bits(b.params)).all()
+
+
+@pytest.mark.parametrize("family,knobs", [
+    ("sign_flip", {"rate": 0.3, "scale": 6.0}),
+    ("inner_product", {"rate": 0.3, "strength": 6.0}),
+])
+def test_byzantine_families_stay_finite_under_robust_aggregation(family,
+                                                                 knobs):
+    """Sign-flip and ALIE rows pass the finiteness quarantine by design;
+    a robust aggregator must keep the whole run finite anyway."""
+    from repro.core.aggregation import make_aggregator
+    env = make_stationary(jnp.full((N,), 0.8))
+    trainer = AsyncFLTrainer(
+        cfg=AsyncFLConfig(n_clients=M, n_channels=N),
+        scheduler=GLRCUCB(N, M, history=64), env=env, loss_fn=_loss,
+        faults=make_fault(family, **knobs),
+        aggregator=make_aggregator("coordinate_median"))
+    bx, by = _data(25)
+    keys = jax.random.split(jax.random.PRNGKey(12), 25)
+    fin, mets = trainer.run(trainer.init(_params(), KEY), bx, by, keys)
+    assert bool(jnp.isfinite(tree_flatten_concat(fin.params)).all())
+    assert bool(jnp.isfinite(mets["local_loss"]).all())
 
 
 # ---------------------------------------------------------------------------

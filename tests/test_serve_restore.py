@@ -1,0 +1,154 @@
+"""Serving-tier boundary hygiene + crash recovery (``repro.sim.serve``).
+
+The robustness satellites at the SchedServer boundary:
+
+  * reward sanitization — NaN/Inf/out-of-range reward vectors are repaired
+    (non-finite -> 0, clip to [0, 1]) BEFORE touching scheduler state, a
+    dirty stream serves bitwise like its pre-clipped twin, and the
+    per-tenant ``bad_rewards`` counter in ``stats()`` bills exactly one
+    increment per offending request;
+  * crash recovery — ``save()`` mid-``serve_stream`` then ``restore()``
+    into a FRESH server resumes the stream bitwise against an
+    uninterrupted run, carrying tenant slots, free-pool allocation order,
+    and serving counters; ``restore()`` refuses checkpoints whose
+    scheduler signature or geometry disagrees with the live server.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandits import GLRCUCB
+from repro.sim import SchedServer, ServeRequest
+
+KEY = jax.random.PRNGKey(0)
+N, M = 6, 2
+
+
+def _mk_server():
+    sched = GLRCUCB(N, M, history=32, detector_stride=3, min_samples=4)
+    srv = SchedServer(sched, capacity=4, slots=4)
+    srv.join("a")
+    srv.join("b")
+    return srv
+
+
+def _requests(t0, t1, dirty=False):
+    """Two tenants x rounds [t0, t1); ``dirty`` corrupts tenant a's vector
+    on every third round."""
+    reqs = []
+    for t in range(t0, t1):
+        rows = np.asarray(jax.random.bernoulli(
+            jax.random.fold_in(KEY, 500 + t), 0.6, (2, N)), np.float32)
+        for i, tenant in enumerate(("a", "b")):
+            r = rows[i].copy()
+            if dirty and tenant == "a" and t % 3 == 0:
+                r[0], r[1], r[2] = np.nan, np.inf, -4.0
+            reqs.append(ServeRequest(
+                tenant=tenant, rewards=r,
+                key=jax.random.fold_in(KEY, 900 + 2 * t + i)))
+    return reqs
+
+
+def _drain(srv, reqs):
+    out = [None] * len(reqs)
+    for i, asg in srv.serve_stream(reqs):
+        out[i] = np.asarray(asg)
+    return out
+
+
+def _clip(reqs):
+    clipped = []
+    for rq in reqs:
+        r = np.asarray(rq.rewards, np.float32)
+        r = np.clip(np.where(np.isfinite(r), r, 0.0), 0.0, 1.0)
+        clipped.append(ServeRequest(tenant=rq.tenant, rewards=r, key=rq.key))
+    return clipped
+
+
+# ---------------------------------------------------------------------------
+# reward sanitization
+# ---------------------------------------------------------------------------
+
+def test_clean_streams_are_untouched_and_unbilled():
+    srv = _mk_server()
+    out = _drain(srv, _requests(0, 8))
+    assert len(out) == 16 and all(a is not None for a in out)
+    assert srv.stats()["bad_rewards"] == {}
+
+
+def test_dirty_stream_serves_like_its_preclipped_twin():
+    reqs = _requests(0, 9, dirty=True)
+    a = _drain(_mk_server(), reqs)
+    b = _drain(_mk_server(), _clip(reqs))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_bad_rewards_bills_one_increment_per_offending_request():
+    srv = _mk_server()
+    _drain(srv, _requests(0, 9, dirty=True))
+    # dirty rounds: t in {0, 3, 6}, tenant a only
+    assert srv.stats()["bad_rewards"] == {"a": 3}
+
+
+# ---------------------------------------------------------------------------
+# crash recovery
+# ---------------------------------------------------------------------------
+
+def test_kill_mid_stream_save_restore_resumes_bitwise(tmp_path):
+    t_half, t_end = 10, 20
+    full = _drain(_mk_server(), _requests(0, t_end))
+
+    crashed = _mk_server()
+    first = _drain(crashed, _requests(0, t_half))
+    crashed.save(str(tmp_path), step=t_half)
+    del crashed                                  # the "crash"
+
+    revived = _mk_server()
+    step = revived.restore(str(tmp_path), warm=False)
+    assert step == t_half
+    second = _drain(revived, _requests(t_half, t_end))
+
+    assert len(first) + len(second) == len(full)
+    for x, y in zip(first + second, full):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_restore_carries_counters_and_tenant_slots(tmp_path):
+    srv = _mk_server()
+    _drain(srv, _requests(0, 9, dirty=True))
+    before = srv.stats()
+    srv.save(str(tmp_path))
+
+    revived = _mk_server()
+    revived.restore(str(tmp_path), warm=False)
+    after = revived.stats()
+    for k in ("tenants", "served", "steps", "stream_steps",
+              "rows_dispatched", "bad_rewards"):
+        assert after[k] == before[k], k
+    # slot assignment survives: the revived server keeps serving both
+    # tenants without a re-join
+    out = _drain(revived, _requests(9, 12))
+    assert len(out) == 6 and all(a is not None for a in out)
+
+
+def test_restore_rejects_mismatched_geometry(tmp_path):
+    srv = _mk_server()
+    _drain(srv, _requests(0, 4))
+    srv.save(str(tmp_path))
+
+    bigger = SchedServer(GLRCUCB(N, M, history=32, detector_stride=3,
+                                 min_samples=4), capacity=8, slots=4)
+    with pytest.raises(ValueError, match="capacity"):
+        bigger.restore(str(tmp_path), warm=False)
+
+    other_sched = SchedServer(GLRCUCB(N, M, history=64), capacity=4, slots=4)
+    with pytest.raises(ValueError, match="scheduler configuration"):
+        other_sched.restore(str(tmp_path), warm=False)
+
+
+def test_restore_into_empty_directory_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        _mk_server().restore(str(tmp_path / "nothing"), warm=False)
